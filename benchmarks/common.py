@@ -1,0 +1,38 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from typing import Dict, Iterable, List
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "bench")
+
+
+def write_csv(name: str, rows: List[Dict], fieldnames=None):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    if not rows:
+        return path
+    fieldnames = fieldnames or list(rows[0].keys())
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=fieldnames)
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
+    return path
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0
+
+
+def report(name: str, seconds: float, derived: str):
+    """The harness contract: ``name,us_per_call,derived`` CSV to stdout."""
+    print(f"{name},{seconds*1e6:.1f},{derived}")

@@ -1,0 +1,45 @@
+"""Fig. 10 / Appendix B — energy to complete each workload vs the fixed
+reference (idle 100 W / loaded 340 W per node), plus the TPU-constant study."""
+from __future__ import annotations
+
+from benchmarks.common import report, timer, write_csv
+from repro.rms import SimConfig, Simulator, make_workload
+from benchmarks.submission_modes import CLASSES
+
+SIZES = [100, 250, 500, 1000]
+
+# beyond-paper: v5e-like host-amortized chip power
+TPU_IDLE_W, TPU_LOADED_W = 55.0, 170.0
+
+
+def run(sizes=SIZES):
+    rows = []
+    with timer() as t:
+        for n in sizes:
+            ref = None
+            for label, mold, mall in CLASSES:
+                jobs = make_workload(n, moldable=mold, malleable=mall, seed=42)
+                for variant, cfg in (
+                        ("paper", SimConfig(record_timeline=False)),
+                        ("tpu", SimConfig(record_timeline=False,
+                                          idle_w=TPU_IDLE_W,
+                                          loaded_w=TPU_LOADED_W))):
+                    s = Simulator(jobs, cfg).run().summary()
+                    if ref is None and variant == "paper":
+                        ref = s["energy_kwh"]
+                    rows.append({
+                        "jobs": n, "class": label, "constants": variant,
+                        "energy_kwh": round(s["energy_kwh"], 1),
+                        "pct_of_fixed": round(100 * s["energy_kwh"] / ref, 1)
+                        if variant == "paper" else "",
+                    })
+    path = write_csv("fig10_energy", rows)
+    r1000 = {r["class"]: r for r in rows
+             if r["jobs"] == 1000 and r["constants"] == "paper"}
+    report("fig10_energy", t.seconds,
+           f"flexible_energy_pct_of_fixed_1000="
+           f"{r1000['flexible']['pct_of_fixed']}%;csv={path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Table 7 — heterogeneous workloads: resource allocation and completion time
+with 0/25/50/75/100% malleable jobs and with only one app malleable."""
+from __future__ import annotations
+
+from benchmarks.common import report, timer, write_csv
+from repro.rms import SimConfig, Simulator, make_workload
+from repro.rms.workload import APPS
+
+
+def run(n=1000):
+    rows = []
+    with timer() as t:
+        for mold, sub in ((False, "rigid"), (True, "moldable")):
+            ref = None
+            cases = [("none", dict(malleable=False)),
+                     ("25%", dict(malleable=True, malleable_fraction=0.25)),
+                     ("50%", dict(malleable=True, malleable_fraction=0.50)),
+                     ("75%", dict(malleable=True, malleable_fraction=0.75)),
+                     ("all", dict(malleable=True))] + [
+                        (f"{a}-only", dict(malleable=True,
+                                           malleable_only_app=a))
+                        for a in APPS]
+            for label, kw in cases:
+                jobs = make_workload(n, moldable=mold, seed=42, **kw)
+                s = Simulator(jobs, SimConfig(record_timeline=False)).run() \
+                    .summary()
+                if ref is None:
+                    ref = s
+                rows.append({
+                    "submission": sub, "malleable": label,
+                    "alloc_rate_pct": round(100 * s["alloc_rate"], 2),
+                    "completion_time_pct_of_ref":
+                        round(100 * s["makespan_s"] / ref["makespan_s"], 2),
+                })
+    path = write_csv("table7_partial_malleability", rows)
+    r = {(x["submission"], x["malleable"]): x for x in rows}
+    report("table7_partial_malleability", t.seconds,
+           f"rigid_all={r[('rigid','all')]['completion_time_pct_of_ref']}%"
+           f";rigid_nbody_only="
+           f"{r[('rigid','nbody-only')]['completion_time_pct_of_ref']}%"
+           f";csv={path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Figs. 6-7 — per-application waiting/execution times in the 1,000-job
+moldable workload, pure-moldable vs flexible."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import report, timer, write_csv
+from repro.rms import SimConfig, Simulator, make_workload
+from repro.rms.workload import Job
+
+
+def run(n=1000):
+    rows = []
+    with timer() as t:
+        res = {}
+        for mall, label in ((False, "pure-moldable"), (True, "flexible")):
+            jobs = make_workload(n, moldable=True, malleable=mall, seed=42)
+            res[label] = Simulator(jobs,
+                                   SimConfig(record_timeline=False)).run()
+        for label, r in res.items():
+            by_app = {}
+            for j in r.jobs:
+                by_app.setdefault(j.app.name, []).append(j)
+            for app, js in sorted(by_app.items()):
+                rows.append({
+                    "workload": label, "app": app, "jobs": len(js),
+                    "mean_wait_s": round(np.mean([j.waiting() for j in js]), 1),
+                    "mean_exec_s": round(np.mean([j.execution() for j in js]), 1),
+                    "mean_completion_s": round(
+                        np.mean([j.completion() for j in js]), 1),
+                })
+    path = write_csv("fig6_7_per_job_times", rows)
+    # paper: poorly-scalable apps (nbody/hpg) show ~same exec in both versions
+    pm = {r["app"]: r for r in rows if r["workload"] == "pure-moldable"}
+    fl = {r["app"]: r for r in rows if r["workload"] == "flexible"}
+    nb = fl["nbody"]["mean_exec_s"] / max(pm["nbody"]["mean_exec_s"], 1e-9)
+    cg = fl["cg"]["mean_exec_s"] / max(pm["cg"]["mean_exec_s"], 1e-9)
+    report("fig6_7_per_job_times", t.seconds,
+           f"nbody_exec_ratio={nb:.2f};cg_exec_ratio={cg:.2f};csv={path}")
+
+
+if __name__ == "__main__":
+    run()

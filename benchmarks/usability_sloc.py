@@ -1,0 +1,62 @@
+"""Table 2 — usability (SLOC of the malleability integration).
+
+Counts non-blank, non-comment source lines of the *malleability-specific*
+code in each example (everything except imports/problem setup), alongside
+the paper's Table 2 values for the surveyed frameworks.
+"""
+from __future__ import annotations
+
+import os
+import re
+
+from benchmarks.common import report, timer, write_csv
+
+HERE = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+PAPER_TABLE2 = [
+    ("Bare MPI", 28), ("PCM API", 30), ("AMPI", 13), ("Flex-MPI", 21),
+    ("Elastic MPI", 26), ("DMR API", 17), ("DMRlib (paper)", 13),
+]
+
+# the malleability integration in quickstart.py: runner construction + loop
+INTEGRATION_RE = re.compile(
+    r"(MalleabilityParams|MalleableRunner|ScriptedRMS|maybe_reconfig|"
+    r"runner\.(init|step|events)|LMTrainApp)")
+
+
+def sloc(path: str, only_integration: bool) -> int:
+    n = 0
+    with open(path) as f:
+        for line in f:
+            s = line.strip()
+            if not s or s.startswith("#") or s.startswith('"""') or \
+                    s.startswith("'''") or s.startswith("import") or \
+                    s.startswith("from") or s.startswith("if \""):
+                continue
+            if only_integration and not INTEGRATION_RE.search(s):
+                continue
+            n += 1
+    return n
+
+
+def run():
+    rows = [{"framework": f, "sloc": s, "source": "paper Table 2"}
+            for f, s in PAPER_TABLE2]
+    with timer() as t:
+        for ex in ("quickstart", "cg_solver", "jacobi", "nbody",
+                   "aligner_pipeline"):
+            p = os.path.join(HERE, "examples", f"{ex}.py")
+            rows.append({
+                "framework": f"repro:{ex}",
+                "sloc": sloc(p, only_integration=True),
+                "source": "malleability-integration lines",
+            })
+    path = write_csv("table2_usability_sloc", rows)
+    ours = [r for r in rows if r["framework"] == "repro:quickstart"][0]
+    report("table2_usability_sloc", t.seconds,
+           f"quickstart_integration_sloc={ours['sloc']}"
+           f";paper_dmrlib=13;csv={path}")
+
+
+if __name__ == "__main__":
+    run()

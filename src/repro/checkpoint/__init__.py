@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import (CheckpointManager, restore_state,
+                                      save_state)
+
+__all__ = ["CheckpointManager", "restore_state", "save_state"]

@@ -1,0 +1,84 @@
+"""On-disk checkpoint/restart — the paper's §2.1 baseline, and the fault-
+tolerance fallback when in-memory redistribution (§2.2) is impossible
+(not enough surviving workers).
+
+Layout: one .npz per checkpoint step plus a JSON manifest; restore reshards
+directly onto the target mesh (so a C/R-based "resize" — the PCM/SCR-style
+malleability of §2.1 — is expressible and benchmarked against the in-memory
+path in benchmarks/redistribution_overhead.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(state) -> Tuple[Dict[str, np.ndarray], Any]:
+    leaves, treedef = jax.tree.flatten(state)
+    return {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}, treedef
+
+
+def save_state(path: str, state, step: int) -> Dict[str, float]:
+    """Write a checkpoint; returns timing/size stats."""
+    os.makedirs(path, exist_ok=True)
+    t0 = time.perf_counter()
+    arrays, _ = _flatten(state)
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    np.savez(fn, **arrays)
+    sz = os.path.getsize(fn)
+    manifest = {"step": int(step), "file": os.path.basename(fn),
+                "n_leaves": len(arrays), "bytes": sz}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return {"seconds": time.perf_counter() - t0, "bytes": sz}
+
+
+def restore_state(path: str, like, shardings=None,
+                  step: Optional[int] = None):
+    """Restore onto ``shardings`` (any mesh — C/R-based resize)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    step = manifest["step"] if step is None else step
+    fn = os.path.join(path, f"ckpt_{step:08d}.npz")
+    data = np.load(fn)
+    leaves, treedef = jax.tree.flatten(like)
+    out = [np.asarray(data[f"leaf_{i}"]).astype(l.dtype).reshape(l.shape)
+           for i, l in enumerate(leaves)]
+    state = jax.tree.unflatten(treedef, out)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, step
+
+
+class CheckpointManager:
+    """Periodic async-ish checkpointing with retention, for the train loop."""
+
+    def __init__(self, path: str, every_steps: int = 100, keep: int = 2):
+        self.path = path
+        self.every = every_steps
+        self.keep = keep
+        self.history: List[int] = []
+
+    def maybe_save(self, state, step: int) -> Optional[Dict[str, float]]:
+        if self.every <= 0 or step % self.every != 0:
+            return None
+        stats = save_state(self.path, state, step)
+        self.history.append(step)
+        while len(self.history) > self.keep:
+            old = self.history.pop(0)
+            fn = os.path.join(self.path, f"ckpt_{old:08d}.npz")
+            if os.path.exists(fn):
+                os.remove(fn)
+        return stats
+
+    def latest_step(self) -> Optional[int]:
+        try:
+            with open(os.path.join(self.path, "manifest.json")) as f:
+                return json.load(f)["step"]
+        except FileNotFoundError:
+            return None

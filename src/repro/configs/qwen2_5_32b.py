@@ -1,0 +1,23 @@
+"""qwen2.5-32b [dense] — GQA with QKV bias.
+
+64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064
+[hf:Qwen/Qwen2.5-0.5B; hf]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    source="hf:Qwen/Qwen2.5-0.5B; hf",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152064,
+    attention="full",
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    train_microbatches=4,     # fits train_4k under 16 GiB/chip on 256 chips
+)

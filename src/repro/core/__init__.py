@@ -1,0 +1,28 @@
+"""The paper's primary contribution: DMRlib malleability, in JAX.
+
+api.py          MalleableRunner / dmr_reconfig (DMR_RECONFIG, Algorithm 1)
+params.py       MalleabilityParams (min/max/pref + inhibitors, §3.2)
+policy.py       Algorithm 2 resize policy (§5.1)
+redistribute.py default + block-cyclic patterns, pytree resharding (§3.4)
+rms_client.py   runner <-> RMS channel (Scripted / Policy / File)
+lm_app.py       LM-training MalleableApp over the model zoo
+"""
+from repro.core.api import MalleableApp, MalleableRunner, ResizeEvent, dmr_reconfig
+from repro.core.params import (MalleabilityParams, expansion_target,
+                               shrink_target)
+from repro.core.policy import Action, ClusterView, decide
+from repro.core.redistribute import (TransferStats, blockcyclic_merge,
+                                     blockcyclic_redistribute,
+                                     blockcyclic_split,
+                                     default_redistribution,
+                                     redistribute_state, state_bytes)
+from repro.core.rms_client import FileRMS, PolicyRMS, RMSClient, ScriptedRMS
+
+__all__ = [
+    "MalleableApp", "MalleableRunner", "ResizeEvent", "dmr_reconfig",
+    "MalleabilityParams", "expansion_target", "shrink_target",
+    "Action", "ClusterView", "decide",
+    "TransferStats", "blockcyclic_merge", "blockcyclic_redistribute",
+    "blockcyclic_split", "default_redistribution", "redistribute_state",
+    "state_bytes", "FileRMS", "PolicyRMS", "RMSClient", "ScriptedRMS",
+]

@@ -1,0 +1,72 @@
+"""LM pretraining as a MalleableApp — the paper's technique integrated as a
+first-class feature of the training framework.
+
+A training job binds (ArchConfig, shape, optimizer) and becomes elastically
+resizable between any legal worker counts: the full TrainState (params, AdamW
+moments, step, RNG, data cursor) is redistributed in-memory on every resize
+and the per-mesh executable is swapped. Bit-exact continuation is covered by
+tests/test_elastic.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.pipeline import SyntheticDataset
+from repro.models.train import (TrainState, abstract_state, init_state,
+                                make_train_step)
+from repro.optim.adamw import AdamW
+from repro.parallel.context import sharding_context
+from repro.parallel.sharding import (batch_shardings, rules_for,
+                                     state_shardings)
+
+
+class LMTrainApp:
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig,
+                 optimizer: Optional[AdamW] = None, seed: int = 0,
+                 global_batch: Optional[int] = None):
+        self.cfg = cfg
+        self.shape = shape
+        self.optimizer = optimizer or AdamW(
+            learning_rate=1e-3, moment_dtype=cfg.opt_moment_dtype)
+        self.seed = seed
+        self.dataset = SyntheticDataset(cfg, shape, seed=seed,
+                                        global_batch=global_batch)
+        self.rules = rules_for(cfg)
+        self._train_step = make_train_step(cfg, self.optimizer)
+
+    # -- MalleableApp protocol -----------------------------------------
+    def state_shardings(self, mesh):
+        return state_shardings(self.cfg, mesh)
+
+    def init_state(self, mesh) -> TrainState:
+        ss = self.state_shardings(mesh)
+        with sharding_context(mesh, self.rules):
+            fn = jax.jit(lambda: init_state(self.cfg, self.optimizer,
+                                            self.seed),
+                         out_shardings=ss)
+            return fn()
+
+    def make_step(self, mesh):
+        ss = self.state_shardings(mesh)
+        ds = self.dataset
+        example = ds.batch_at(0)
+        bs = batch_shardings(self.cfg, self.shape, mesh, example)
+        step_impl = self._train_step
+        rules = self.rules
+        jitted = jax.jit(step_impl, in_shardings=(ss, bs),
+                         out_shardings=(ss, None), donate_argnums=(0,))
+
+        def fn(state: TrainState, step_i: int,
+               batch: Optional[Dict[str, np.ndarray]] = None):
+            if batch is None:
+                batch = ds.batch_at(step_i * ds.global_batch)
+            batch = {k: jax.device_put(np.asarray(v), bs[k])
+                     for k, v in batch.items()}
+            with sharding_context(mesh, rules):
+                return jitted(state, batch)
+
+        return fn

@@ -1,0 +1,94 @@
+"""Algorithm 2 — the system-aware resize policy (paper §5.1), verbatim.
+
+The policy sees a *cluster view* (available workers, pending queue) and a
+*job view* (current / preferred / limits) and returns one of
+{expand, shrink, none}. It is deliberately identical in structure to the
+paper's pseudo-code so the workload studies reproduce its decisions:
+
+    1: if current < preferred then
+    2:     if avail_resources then return expand
+    3: else
+    4:     if pending_jobs then
+    5:         if current > preferred then
+    6:             if an additional job can be initiated then return shrink
+    7:         else
+    8:             if avail_resources then return expand
+    9:     else
+   10:         if avail_resources then return expand
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.core.params import (MalleabilityParams, expansion_target,
+                               shrink_target)
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    kind: str                 # "expand" | "shrink" | "none"
+    target: int               # worker count after the action
+
+    @staticmethod
+    def none(current: int) -> "Action":
+        return Action("none", current)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterView:
+    available: int                       # idle workers
+    pending_min_sizes: Sequence[int]     # min worker count of each queued job
+    # workers other running malleable jobs could release by shrinking to
+    # their preferred sizes. Line 6's "an additional job can be initiated"
+    # is evaluated cluster-wide: each job's shrink is admissible when the
+    # POOLED prospective releases unblock a pending job (otherwise no job
+    # ever moves first on a saturated cluster — see DESIGN.md §9).
+    reclaimable_others: int = 0
+
+
+def decide(current: int, params: MalleabilityParams,
+           cluster: ClusterView) -> Action:
+    """Algorithm 2."""
+    def try_expand(cap: Optional[int] = None) -> Optional[Action]:
+        if cluster.available > 0:
+            tgt = expansion_target(current, params, cluster.available)
+            if cap is not None:
+                tgt = min(tgt, max(cap, current))
+            if tgt > current:
+                return Action("expand", tgt)
+        return None
+
+    # line 1-2: running below preferred (moldable under-allocation) — grow
+    # toward preferred; growth beyond it is line 10's business (empty queue).
+    if current < params.preferred:
+        act = try_expand(cap=params.preferred)
+        return act or Action.none(current)
+
+    # line 4: pending jobs exist
+    if cluster.pending_min_sizes:
+        if current > params.preferred:
+            # line 6: shrink if the released workers let a pending job start.
+            # Any legal size in [preferred, current) is admissible (divisors
+            # of the parent count, §6); pick the LARGEST one that unblocks a
+            # pending job — least disruption that still serves the queue.
+            pool = cluster.available + cluster.reclaimable_others
+            candidates = sorted(
+                (s for s in params.legal_sizes()
+                 if params.preferred <= s < current), reverse=True)
+            for tgt in candidates:
+                released = current - tgt
+                if any(released + pool >= m
+                       for m in cluster.pending_min_sizes):
+                    return Action("shrink", tgt)
+        else:
+            # line 8: grow toward (not past) preferred while others queue —
+            # expanding past preferred here would fight line 6 forever.
+            act = try_expand(cap=params.preferred)
+            if act:
+                return act
+        return Action.none(current)
+
+    # line 10: idle resources, empty queue -> grow toward the upper limit
+    act = try_expand()
+    return act or Action.none(current)

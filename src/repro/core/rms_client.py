@@ -1,0 +1,72 @@
+"""Runner <-> RMS communication channel (the DMRlib <-> Slurm link, Fig. 1).
+
+Implementations:
+  * ScriptedRMS  — deterministic action schedule (tests, examples).
+  * PolicyRMS    — evaluates Algorithm 2 against a live ClusterView provider.
+  * FileRMS      — watches a JSON file for operator-issued resize commands
+                   (the single-host stand-in for the Slurm RPC socket; used by
+                   the elastic training demo).
+  * SimJobHandle — adapter used inside the discrete-event simulator.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, Optional, Protocol
+
+from repro.core.params import MalleabilityParams
+from repro.core.policy import Action, ClusterView, decide
+
+
+class RMSClient(Protocol):
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action: ...
+
+
+class ScriptedRMS:
+    """Fixed {step: target_size} schedule."""
+
+    def __init__(self, schedule: Dict[int, int]):
+        self.schedule = dict(schedule)
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action:
+        tgt = self.schedule.get(step)
+        if tgt is None or tgt == current:
+            return Action.none(current)
+        tgt = params.clamp(tgt)
+        return Action("expand" if tgt > current else "shrink", tgt)
+
+
+class PolicyRMS:
+    """Algorithm 2 against a caller-supplied cluster view."""
+
+    def __init__(self, view_fn: Callable[[], ClusterView]):
+        self.view_fn = view_fn
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action:
+        return decide(current, params, self.view_fn())
+
+
+class FileRMS:
+    """Reads {"target": N} from a JSON file when its mtime changes."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._mtime = 0.0
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action:
+        try:
+            mtime = os.stat(self.path).st_mtime
+        except FileNotFoundError:
+            return Action.none(current)
+        if mtime <= self._mtime:
+            return Action.none(current)
+        self._mtime = mtime
+        with open(self.path) as f:
+            tgt = params.clamp(int(json.load(f).get("target", current)))
+        if tgt == current:
+            return Action.none(current)
+        return Action("expand" if tgt > current else "shrink", tgt)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticDataset, make_batch, input_specs
+
+__all__ = ["SyntheticDataset", "make_batch", "input_specs"]

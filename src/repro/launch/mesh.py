@@ -1,0 +1,10 @@
+"""Production mesh entry point (dry-run contract).
+
+``make_production_mesh`` must be a function — importing this module never
+touches jax device state.
+"""
+from repro.parallel.mesh import (factor_mesh, host_devices, make_job_mesh,
+                                 make_production_mesh)
+
+__all__ = ["make_production_mesh", "make_job_mesh", "factor_mesh",
+           "host_devices"]

@@ -1,0 +1,85 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python -m repro.launch.report [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def roofline_table(recs, mesh="pod16x16"):
+    rows = ["| arch | shape | fit (GiB) | compute | memory | collective | "
+            "bottleneck | MFU | useful |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                        f"skipped: {r['reason'][:40]}… | — | — |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | | | | | | |")
+            continue
+        rl = r["roofline"]
+        m = r["memory"]
+        fit = f"{m['total_gib']:.1f}{'' if m['fits_16gib'] else ' ✗'}"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fit} | {fmt_s(rl['compute_s'])} "
+            f"| {fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+            f"{rl['bottleneck']} | {rl['mfu']:.1%} | "
+            f"{rl['useful_ratio']:.2f} |")
+    return "\n".join(rows)
+
+
+def dryrun_summary(recs):
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skipped"]
+    fail = [r for r in recs if r["status"] == "FAILED"]
+    lines = [f"cells: {len(ok)} ok / {len(skip)} skipped / {len(fail)} FAILED"]
+    fits = sum(1 for r in ok if r["memory"]["fits_16gib"])
+    lines.append(f"memory: {fits}/{len(ok)} compiled cells fit 16 GiB/chip")
+    for r in fail:
+        lines.append(f"  FAILED {r['arch']} x {r['shape']} x {r['mesh']}: "
+                     f"{r.get('error','')[:120]}")
+    multi = [r for r in ok if r["mesh"] == "pod2x16x16"]
+    lines.append(f"multi-pod (2x16x16): {len(multi)} cells compiled — the "
+                 f"'pod' axis shards (batch + gradient reduction over DCN)")
+    return "\n".join(lines)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="experiments/dryrun")
+    p.add_argument("--mesh", default="pod16x16")
+    args = p.parse_args()
+    recs = load(args.dir)
+    print("## Dry-run summary\n")
+    print(dryrun_summary(recs))
+    print("\n## Roofline (single-pod 16x16, per-device trip-adjusted)\n")
+    print(roofline_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Elastic training driver — DMRlib malleability on a live training job.
+
+Examples (CPU demo on host devices):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+  python -m repro.launch.train --arch granite-3-2b-smoke --steps 20 \\
+      --min 2 --max 8 --pref 4 --resize-at 5:8 --resize-at 12:2
+
+  # operator-driven resizes (the Slurm-RPC stand-in):
+  ... --rms-file /tmp/resize.json      # echo '{"target": 8}' > /tmp/resize.json
+
+On a real TPU cluster the same driver runs under the production mesh; the
+only difference is the device inventory handed to MalleableRunner.
+"""
+import argparse
+import os
+import sys
+
+
+def _early_devices():
+    """--host-devices must take effect before jax imports."""
+    for i, a in enumerate(sys.argv):
+        if a == "--host-devices":
+            n = int(sys.argv[i + 1])
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count={n}")
+        elif a.startswith("--host-devices="):
+            n = int(a.split("=", 1)[1])
+            os.environ["XLA_FLAGS"] = (
+                os.environ.get("XLA_FLAGS", "") +
+                f" --xla_force_host_platform_device_count={n}")
+
+
+_early_devices()
+
+import warnings                                    # noqa: E402
+warnings.filterwarnings("ignore")
+
+import jax                                         # noqa: E402
+
+from repro.checkpoint import CheckpointManager     # noqa: E402
+from repro.configs import get_config, get_shape    # noqa: E402
+from repro.configs.base import ShapeConfig         # noqa: E402
+from repro.core import (FileRMS, MalleabilityParams, MalleableRunner,
+                        ScriptedRMS)               # noqa: E402
+from repro.core.lm_app import LMTrainApp           # noqa: E402
+from repro.optim import AdamW, cosine_schedule     # noqa: E402
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", required=True)
+    p.add_argument("--shape", default=None,
+                   help="named shape; default: a small training shape")
+    p.add_argument("--steps", type=int, default=20)
+    p.add_argument("--global-batch", type=int, default=8)
+    p.add_argument("--seq-len", type=int, default=64)
+    p.add_argument("--min", type=int, default=2)
+    p.add_argument("--max", type=int, default=8)
+    p.add_argument("--pref", type=int, default=4)
+    p.add_argument("--lr", type=float, default=1e-3)
+    p.add_argument("--resize-at", action="append", default=[],
+                   metavar="STEP:TARGET")
+    p.add_argument("--rms-file", default=None)
+    p.add_argument("--checkpoint-dir", default=None)
+    p.add_argument("--checkpoint-every", type=int, default=0)
+    p.add_argument("--host-devices", type=int, default=None)  # consumed early
+    p.add_argument("--seed", type=int, default=0)
+    args = p.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.shape:
+        shape = get_shape(args.shape)
+    else:
+        shape = ShapeConfig("cli_train", "train", args.seq_len,
+                            args.global_batch)
+
+    opt = AdamW(learning_rate=cosine_schedule(args.lr, 10, args.steps),
+                moment_dtype=cfg.opt_moment_dtype)
+    app = LMTrainApp(cfg, shape, opt, seed=args.seed)
+    params = MalleabilityParams(args.min, args.max, args.pref)
+    if args.rms_file:
+        rms = FileRMS(args.rms_file)
+    else:
+        rms = ScriptedRMS({int(s.split(":")[0]): int(s.split(":")[1])
+                           for s in args.resize_at})
+    runner = MalleableRunner(app, params, rms)
+    ckpt = CheckpointManager(args.checkpoint_dir or "/tmp/repro_ckpt",
+                             every_steps=args.checkpoint_every)
+
+    state = runner.init()
+    start = int(jax.device_get(state.step))
+    print(f"# elastic train: {cfg.name} on {runner.current} workers "
+          f"(min {args.min} / pref {args.pref} / max {args.max})")
+    for step in range(start, args.steps):
+        state = runner.maybe_reconfig(state, step)
+        state, metrics = runner.step(state, step)
+        loss = float(jax.device_get(metrics["loss"]))
+        print(f"step {step:4d}  workers {runner.current:3d}  "
+              f"loss {loss:.4f}")
+        if args.checkpoint_every:
+            ckpt.maybe_save(jax.device_get(state), step)
+    for e in runner.events:
+        print(f"# resize @step {e.step}: {e.action} {e.from_procs}->"
+              f"{e.to_procs}, moved {e.transfer.bytes_moved/1e6:.1f} MB in "
+              f"{e.transfer.seconds*1e3:.1f} ms, recompile {e.recompile_s:.2f}s")
+    print("# done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,273 @@
+"""Model assembly for every assigned architecture family.
+
+The same ``ArchConfig`` drives schema construction (parameters + logical
+sharding axes), the training forward pass, and the decode (serving) path.
+Layer stacks are scanned (``jax.lax.scan``) so HLO size — and hence dry-run
+compile time on the 512-device mesh — stays O(1) in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import blocks, params as P, ssm as ssm_mod
+from repro.models.layers import (embed, embed_schema, rmsnorm,
+                                 rmsnorm_schema, unembed)
+from repro.models.params import ParamDef
+
+
+# ----------------------------------------------------------------------
+# Schema
+# ----------------------------------------------------------------------
+
+def model_schema(cfg: ArchConfig):
+    s: Dict[str, Any] = {"embed": embed_schema(cfg),
+                         "ln_f": rmsnorm_schema(cfg.d_model, cfg)}
+    if cfg.is_ssm:
+        s["layers"] = P.stack(blocks.ssm_block_schema(cfg), cfg.num_layers)
+    elif cfg.is_hybrid:
+        every = cfg.shared_attention_every
+        groups = cfg.num_layers // every
+        s["layers"] = P.stack(blocks.ssm_block_schema(cfg),
+                              cfg.num_layers, axis_name="layers")
+        s["shared_attn"] = {          # ONE weight set, applied per group
+            "ln1": rmsnorm_schema(cfg.d_model, cfg),
+            "attn": attn_mod.attention_schema(cfg),
+            "ln2": rmsnorm_schema(cfg.d_model, cfg),
+            "mlp": blocks.mlp_schema(cfg),
+        }
+        assert cfg.num_layers % every == 0, (cfg.num_layers, every)
+        del groups
+    else:
+        s["layers"] = P.stack(
+            blocks.decoder_block_schema(cfg, cross=cfg.is_encdec),
+            cfg.num_layers)
+    if cfg.is_encdec:
+        s["enc_layers"] = P.stack(blocks.encoder_block_schema(cfg),
+                                  cfg.encoder_layers)
+        s["ln_enc"] = rmsnorm_schema(cfg.d_model, cfg)
+    if cfg.frontend is not None:
+        s["frontend_proj"] = ParamDef((cfg.frontend.embed_dim, cfg.d_model),
+                                      ("frontend", "embed"),
+                                      dtype=cfg.param_dtype)
+    return s
+
+
+def init_params(cfg: ArchConfig, key):
+    return P.init(model_schema(cfg), key)
+
+
+def abstract_params(cfg: ArchConfig):
+    return P.abstract(model_schema(cfg))
+
+
+def logical_axes(cfg: ArchConfig):
+    return P.logical_axes(model_schema(cfg))
+
+
+# ----------------------------------------------------------------------
+# Scanned trunk (training / prefill)
+# ----------------------------------------------------------------------
+
+def _scan_layers(layer_params, x, body, cfg: ArchConfig):
+    """Scan ``body(x, one_layer_params) -> (x, aux)`` over stacked params."""
+    fn = jax.checkpoint(body) if cfg.remat else body
+
+    def wrapped(carry, lp):
+        return fn(carry, lp)
+
+    x, auxs = jax.lax.scan(wrapped, x, layer_params)
+    return x, jnp.sum(auxs)
+
+
+def _trunk(params, x, cfg: ArchConfig, positions, enc_out=None):
+    """Hidden-state trunk shared by train and prefill. Returns (x, aux)."""
+    if cfg.is_ssm:
+        def body(h, lp):
+            return blocks.ssm_block_apply(lp, h, cfg), jnp.float32(0.0)
+        return _scan_layers(params["layers"], x, body, cfg)
+
+    if cfg.is_hybrid:
+        every = cfg.shared_attention_every
+        groups = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda t: t.reshape(groups, every, *t.shape[1:]), params["layers"])
+        shared = params["shared_attn"]
+
+        def group_body(h, glp):
+            def inner(hh, lp):
+                return blocks.ssm_block_apply(lp, hh, cfg), None
+            # nested remat: without it the inner scan stashes every SSM
+            # intermediate for all ``every`` layers during the group backward
+            inner_fn = jax.checkpoint(inner) if cfg.remat else inner
+            h, _ = jax.lax.scan(inner_fn, h, glp)
+            hn = rmsnorm(shared["ln1"], h, cfg.norm_eps)
+            h = h + attn_mod.attn_apply(shared["attn"], hn, cfg,
+                                        positions=positions, causal=True)
+            hn = rmsnorm(shared["ln2"], h, cfg.norm_eps)
+            h = h + blocks.mlp(shared["mlp"], hn, cfg)
+            return h, jnp.float32(0.0)
+
+        body = jax.checkpoint(group_body) if cfg.remat else group_body
+        x, auxs = jax.lax.scan(body, x, grouped)
+        return x, jnp.sum(auxs)
+
+    def body(h, lp):
+        return blocks.decoder_block_apply(lp, h, cfg, positions=positions,
+                                          enc_out=enc_out, causal=True)
+    return _scan_layers(params["layers"], x, body, cfg)
+
+
+def _encode(params, frames, cfg: ArchConfig):
+    """Audio/encoder stack over precomputed frame embeddings (stub frontend)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = jnp.einsum("bse,ed->bsd", frames.astype(dt),
+                   params["frontend_proj"].astype(dt))
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(h, lp):
+        return blocks.encoder_block_apply(lp, h, cfg, positions=positions), \
+            jnp.float32(0.0)
+
+    x, _ = _scan_layers(params["enc_layers"], x, body, cfg)
+    return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    """Trunk only -> (final normed hidden (B, S, D), aux_loss).
+
+    batch:
+      tokens (B, S) int32            — always present (decoder tokens)
+      patch_embeds (B, P, E)         — vlm only (prefix tokens)
+      frames (B, S_enc, E)           — audio enc-dec only
+    """
+    from repro.parallel.context import constrain
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, cfg)
+    x = constrain(x, "act_batch", "act_seq_blk", "act_embed")
+    enc_out = None
+
+    if cfg.frontend is not None and cfg.frontend.kind == "vision":
+        dt = jnp.dtype(cfg.dtype)
+        patches = jnp.einsum("bpe,ed->bpd", batch["patch_embeds"].astype(dt),
+                             params["frontend_proj"].astype(dt))
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.is_encdec:
+        enc_out = _encode(params, batch["frames"], cfg)
+
+    positions = jnp.arange(x.shape[1])[None, :]
+    x, aux = _trunk(params, x, cfg, positions, enc_out=enc_out)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, aux
+
+
+def forward(params, cfg: ArchConfig, batch: Dict[str, jnp.ndarray]):
+    """Training/prefill forward -> (full logits, aux_loss)."""
+    x, aux = forward_hidden(params, cfg, batch)
+    return unembed(params["embed"], x, cfg), aux
+
+
+# ----------------------------------------------------------------------
+# Decode (serving) path
+# ----------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int,
+               enc_len: Optional[int] = None):
+    """Decode-state pytree for one new token against a seq_len-deep context."""
+    L = cfg.num_layers
+    if cfg.is_ssm:
+        one = ssm_mod.init_ssm_cache(cfg, batch)
+        return {"layers": jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (L,) + t.shape), one)}
+    if cfg.is_hybrid:
+        groups = cfg.num_layers // cfg.shared_attention_every
+        ssm_one = ssm_mod.init_ssm_cache(cfg, batch)
+        kv_one = attn_mod.init_kv_cache(cfg, batch, seq_len)
+        return {
+            "layers": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (L,) + t.shape), ssm_one),
+            "shared_kv": jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (groups,) + t.shape), kv_one),
+        }
+    kv_one = attn_mod.init_kv_cache(cfg, batch, seq_len)
+    cache = {"layers": jax.tree.map(
+        lambda t: jnp.broadcast_to(t, (L,) + t.shape), kv_one)}
+    if cfg.is_encdec:
+        cross_one = attn_mod.init_kv_cache(cfg, batch, enc_len or seq_len)
+        cache["cross"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (L,) + t.shape), cross_one)
+    return cache
+
+
+def decode_step(params, cfg: ArchConfig, tokens, cache, cache_index):
+    """One-token decode. tokens: (B, 1) int32. Returns (logits, new cache)."""
+    x = embed(params["embed"], tokens, cfg)
+
+    if cfg.is_ssm:
+        def body(h, scanned):
+            lp, c = scanned
+            h, c = blocks.ssm_block_decode(lp, h, cfg, c)
+            return h, c
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        cache = {"layers": new_cache}
+
+    elif cfg.is_hybrid:
+        every = cfg.shared_attention_every
+        groups = cfg.num_layers // every
+        grouped = jax.tree.map(
+            lambda t: t.reshape(groups, every, *t.shape[1:]), params["layers"])
+        grouped_cache = jax.tree.map(
+            lambda t: t.reshape(groups, every, *t.shape[1:]), cache["layers"])
+        shared = params["shared_attn"]
+
+        def group_body(h, scanned):
+            glp, gc, kv = scanned
+
+            def inner(hh, sc):
+                lp, c = sc
+                hh, c = blocks.ssm_block_decode(lp, hh, cfg, c)
+                return hh, c
+            h, gc = jax.lax.scan(inner, h, (glp, gc))
+            hn = rmsnorm(shared["ln1"], h, cfg.norm_eps)
+            a, kv = attn_mod.decode_attn_apply(shared["attn"], hn, cfg, kv,
+                                               cache_index=cache_index)
+            h = h + a
+            hn = rmsnorm(shared["ln2"], h, cfg.norm_eps)
+            h = h + blocks.mlp(shared["mlp"], hn, cfg)
+            return h, (gc, kv)
+
+        x, (new_gc, new_kv) = jax.lax.scan(
+            group_body, x, (grouped, grouped_cache, cache["shared_kv"]))
+        cache = {
+            "layers": jax.tree.map(
+                lambda t: t.reshape(cfg.num_layers, *t.shape[2:]), new_gc),
+            "shared_kv": new_kv,
+        }
+
+    else:
+        cross = cache.get("cross") if cfg.is_encdec else None
+        scanned = (params["layers"], cache["layers"]) if cross is None else \
+            (params["layers"], cache["layers"], cross)
+
+        def body(h, sc):
+            if cross is None:
+                lp, c = sc
+                h, c = blocks.decoder_block_decode(lp, h, cfg, c,
+                                                   cache_index=cache_index)
+            else:
+                lp, c, cc = sc
+                h, c = blocks.decoder_block_decode(lp, h, cfg, c,
+                                                   cache_index=cache_index,
+                                                   cross_cache=cc)
+            return h, c
+
+        x, new_kv = jax.lax.scan(body, x, scanned)
+        cache = dict(cache)
+        cache["layers"] = new_kv
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), cache

@@ -1,0 +1,87 @@
+"""Parameter schemas.
+
+A model is described by a pytree of ``ParamDef`` leaves (the *schema*).  From
+the same schema we derive:
+
+* ``abstract(schema)``      — ShapeDtypeStruct tree (dry-run / AOT lowering)
+* ``logical_axes(schema)``  — tree of logical-axis name tuples, consumed by
+                              ``repro.parallel.sharding`` to build PartitionSpecs
+* ``init(schema, key)``     — concrete parameter tree
+
+Layer stacks are expressed by ``stack(schema, n)`` which prepends a "layers"
+axis; the model applies them with ``jax.lax.scan``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Any, ...]          # logical axis names (None => unsharded axis)
+    dtype: str = "float32"
+    init: str = "normal"           # normal | zeros | ones | scaled_normal | small_a_log
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map(f, schema):
+    return jax.tree.map(f, schema, is_leaf=is_def)
+
+
+def abstract(schema):
+    return tree_map(lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)), schema)
+
+
+def logical_axes(schema):
+    return tree_map(lambda d: d.axes, schema)
+
+
+def _init_leaf(d: ParamDef, key):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "small_a_log":   # mamba2 A_log in [log 1, log 16]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(d.dtype)
+    scale = d.scale
+    if d.init == "scaled_normal":  # residual-out projections: 0.02/sqrt(2L)-style
+        scale = d.scale
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+
+def init(schema, key):
+    leaves, treedef = jax.tree.flatten(schema, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [_init_leaf(d, k) for d, k in zip(leaves, keys)])
+
+
+def stack(schema, n: int, axis_name: Any = "layers"):
+    """Prepend a scan axis of size ``n`` to every leaf."""
+    return tree_map(
+        lambda d: dataclasses.replace(d, shape=(n,) + d.shape,
+                                      axes=(axis_name,) + d.axes),
+        schema)
+
+
+def param_count(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def param_bytes(schema) -> int:
+    leaves = jax.tree.leaves(schema, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) * jnp.dtype(d.dtype).itemsize for d in leaves))

@@ -1,0 +1,6 @@
+from repro.optim.adamw import AdamW, OptState
+from repro.optim.schedules import cosine_schedule, linear_warmup
+from repro.optim.compression import compress_int8, decompress_int8
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "linear_warmup",
+           "compress_int8", "decompress_int8"]

@@ -1,0 +1,13 @@
+from repro.parallel.mesh import (factor_mesh, host_devices, make_job_mesh,
+                                 make_production_mesh, mesh_device_set)
+from repro.parallel.sharding import (ARCH_RULES, DEFAULT_RULES, batch_shardings,
+                                     cache_shardings, param_shardings,
+                                     replicated, rules_for, spec_for_axes,
+                                     state_shardings)
+
+__all__ = [
+    "factor_mesh", "host_devices", "make_job_mesh", "make_production_mesh",
+    "mesh_device_set", "ARCH_RULES", "DEFAULT_RULES", "batch_shardings",
+    "cache_shardings", "param_shardings", "replicated", "rules_for",
+    "spec_for_axes", "state_shardings",
+]

@@ -1,0 +1,80 @@
+"""Activation-sharding context.
+
+Model code is mesh-agnostic; launchers activate a (mesh, rules) context and
+``constrain()`` pins activation shardings at the few places XLA's propagation
+needs guidance (post-embed, block outputs, MoE buckets, logits). Without an
+active context (CPU smoke tests) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+_state = threading.local()
+
+# activation logical axes (extend the weight rules)
+ACT_RULES = {
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    # residual stream between blocks: Megatron-style sequence parallelism —
+    # shards the remat stash 16x and turns block-boundary comms into
+    # all-gather/reduce-scatter pairs.
+    "act_seq_blk": ("model",),
+    "act_embed": None,
+    "act_heads": ("model",),
+    "act_kv_heads": None,
+    "act_mlp": ("model",),
+    "act_vocab": ("model",),
+    "act_experts": ("model",),
+    "act_cap": None,
+    "act_ssm_inner": ("model",),
+}
+
+
+def _get() -> Optional[Tuple[Mesh, dict]]:
+    return getattr(_state, "ctx", None)
+
+
+def get_context() -> Optional[Tuple[Mesh, dict]]:
+    """Public accessor: (mesh, merged rules) or None outside a context."""
+    return _get()
+
+
+@contextlib.contextmanager
+def suspend_sharding_context():
+    """Temporarily deactivate constraints (inside shard_map bodies, where
+    with_sharding_constraint on per-shard values is meaningless)."""
+    prev = _get()
+    _state.ctx = None
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh, rules: dict):
+    merged = dict(rules)
+    for k, v in ACT_RULES.items():
+        merged.setdefault(k, v)
+    prev = _get()
+    _state.ctx = (mesh, merged)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x, *axes):
+    """Pin activation sharding by logical axes; no-op without a context."""
+    ctx = _get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    from repro.parallel.sharding import spec_for_axes
+    spec = spec_for_axes(axes, rules, mesh, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

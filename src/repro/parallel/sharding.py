@@ -1,0 +1,198 @@
+"""Logical-axis sharding rules (MaxText-style) + per-arch overrides.
+
+Every parameter in the model schema carries a tuple of logical axis names;
+``rules_for(cfg)`` maps those to mesh axes, and ``state_shardings`` /
+``batch_shardings`` / ``cache_shardings`` produce full NamedSharding pytrees
+for jit in/out_shardings. Rules degrade gracefully: a mesh without a given
+axis (e.g. single-pod without "pod") simply drops it.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import model as M
+from repro.models import params as Pm
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+# Baseline rules: TP over "model", FSDP over "data" on the embed axis of
+# weight matrices, batch over ("pod","data"). kv_heads replicated (GQA
+# kv-count < model-axis on most archs — Megatron-style KV duplication).
+DEFAULT_RULES: Rules = {
+    "vocab": ("model",),
+    "embed": ("data",),
+    "q_heads": ("model",),
+    "kv_heads": None,
+    "head_dim": None,
+    "mlp": ("model",),
+    "experts": ("model",),
+    "experts_in": None,
+    "expert_mlp": None,
+    "ssm_inner": ("model",),
+    "ssm_heads": None,
+    "ssm_state": None,
+    "norm": None,
+    "frontend": None,
+    "layers": None,
+    "batch": ("pod", "data"),
+    "seq": None,
+}
+
+# Per-arch overrides (see DESIGN.md §6 and EXPERIMENTS.md §Perf).
+ARCH_RULES: Dict[str, Rules] = {
+    # mixtral: only 8 experts — TP inside each expert instead of padding the
+    # expert axis onto 16 shards.
+    "mixtral-8x7b": {"experts": None, "expert_mlp": ("model",)},
+}
+
+
+def rules_for(cfg: ArchConfig, overrides: Optional[Rules] = None) -> Rules:
+    r = dict(DEFAULT_RULES)
+    r.update(ARCH_RULES.get(cfg.name, {}))
+    if overrides:
+        r.update(overrides)
+    return r
+
+
+def spec_for_axes(axes: Tuple[Any, ...], rules: Rules, mesh: Mesh,
+                  shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Map logical axes to mesh axes, dropping mappings the dim size cannot
+    honor (jit in_shardings requires exact divisibility — e.g. phi4's 24
+    q_heads on a model=16 axis fall back to replication; see DESIGN.md §5)."""
+    entries = []
+    for i, ax in enumerate(axes):
+        mapped = rules.get(ax) if ax is not None else None
+        if mapped is None:
+            entries.append(None)
+            continue
+        if isinstance(mapped, str):
+            mapped = (mapped,)
+        live = tuple(a for a in mapped if a in mesh.axis_names)
+        if shape is not None:
+            # progressively drop trailing mesh axes until divisible
+            while live:
+                n = 1
+                for a in live:
+                    n *= mesh.shape[a]
+                if shape[i] % n == 0 and shape[i] >= n:
+                    break
+                live = live[:-1]
+        entries.append(live if len(live) > 1 else (live[0] if live else None))
+    return P(*entries)
+
+
+def _named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------
+# Full pytrees
+# ----------------------------------------------------------------------
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh,
+                    overrides: Optional[Rules] = None):
+    rules = rules_for(cfg, overrides)
+    schema = M.model_schema(cfg)
+    return Pm.tree_map(
+        lambda d: _named(mesh, spec_for_axes(d.axes, rules, mesh, d.shape)),
+        schema)
+
+
+def state_shardings(cfg: ArchConfig, mesh: Mesh,
+                    overrides: Optional[Rules] = None):
+    """Shardings for a full TrainState (params + AdamW moments + scalars)."""
+    from repro.models.train import TrainState
+    from repro.optim.adamw import OptState
+    ps = param_shardings(cfg, mesh, overrides)
+    rep = replicated(mesh)
+    return TrainState(
+        params=ps,
+        opt=OptState(mu=jax.tree.map(lambda s: s, ps),
+                     nu=jax.tree.map(lambda s: s, ps),
+                     count=rep),
+        step=rep, rng=rep, data_cursor=rep)
+
+
+def _batch_axes(mesh: Mesh, global_batch: int):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    if global_batch % n == 0 and global_batch >= n:
+        return axes
+    if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return ()  # tiny batch: replicate rows (long_500k handles seq instead)
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    batch: Dict[str, Any]):
+    axes = _batch_axes(mesh, shape.global_batch)
+    spec1 = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def leaf(x):
+        nd = len(x.shape)
+        return _named(mesh, P(spec1, *([None] * (nd - 1))))
+
+    return {k: leaf(v) for k, v in batch.items()}
+
+
+def cache_shardings(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh,
+                    cache_abstract):
+    """Decode-cache shardings (key-based, robust to stacking).
+
+    KV caches: batch over (pod,data) when divisible; for global_batch==1
+    (long_500k) shard the cache *sequence* over "data" instead — sequence-
+    parallel serving. SSM states: batch else heads over "model". All cache
+    leaves are stacked with a leading layer/group axis except nothing —
+    ``init_cache`` always stacks — so the batch dim is axis 1.
+    """
+    axes = _batch_axes(mesh, shape.global_batch)
+    bspec = axes if len(axes) > 1 else (axes[0] if axes else None)
+    seq_par = not axes  # batch unshardable -> shard sequence/heads instead
+    model_n = mesh.shape.get("model", 1)
+    data_n = mesh.shape.get("data", 1)
+
+    def _seq_axes(s: int):
+        """Mesh axes for the cache sequence dim: always 'model' when it
+        divides (a 32k KV cache at batch 128 is ~800 GB — data-sharding
+        alone leaves 50 GB/chip); plus 'data' when batch is unshardable."""
+        out, n = [], 1
+        if seq_par and data_n > 1 and s > 1 and s % (n * data_n) == 0:
+            out.append("data")
+            n *= data_n
+        if model_n > 1 and s > 1 and s % (n * model_n) == 0:
+            out.append("model")
+        if not out:
+            return None
+        return tuple(out) if len(out) > 1 else out[0]
+
+    def leaf(path, x):
+        key = jax.tree_util.keystr(path)
+        nd = len(x.shape)
+        spec = [None] * nd
+        if not seq_par:
+            spec[1] = bspec            # axis 0 is the stacked layer axis
+        if "'k'" in key or "'v'" in key:
+            # (L, B, S, Hkv, hd)
+            spec[2] = _seq_axes(x.shape[2])
+        elif "state" in key:
+            # (L, B, H, P, N): heads over model
+            if x.shape[2] % model_n == 0 and model_n > 1:
+                spec[2] = "model"
+        elif "conv" in key:
+            # (L, B, W-1, C): channels over model
+            if x.shape[3] % model_n == 0 and model_n > 1:
+                spec[3] = "model"
+        return _named(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_abstract)

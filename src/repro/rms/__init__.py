@@ -1,0 +1,5 @@
+from repro.rms.scheduler import SimConfig, SimResult, Simulator, Timeline
+from repro.rms.workload import APPS, AppProfile, Job, feitelson_arrivals, make_workload
+
+__all__ = ["SimConfig", "SimResult", "Simulator", "Timeline", "APPS",
+           "AppProfile", "Job", "feitelson_arrivals", "make_workload"]

@@ -1,0 +1,282 @@
+"""Slurm-analog discrete-event cluster simulator.
+
+Models the paper's §5 testbed: 128 compute nodes (1 controller excluded),
+sched/backfill with a 10-second interval, age-based multifactor priority
+without walltime requests, whole-node select/linear allocation, and the
+Algorithm-2 malleability policy evaluated at scheduler ticks for every
+running malleable job (honoring per-app inhibitor periods).
+
+Resize overhead is charged per the paper's §3.2 findings: dominated by the
+data size over the interconnect bandwidth, plus a spawn term growing with the
+worker count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.policy import ClusterView, decide
+from repro.rms.workload import Job
+
+
+@dataclasses.dataclass
+class SimConfig:
+    nodes: int = 128
+    backfill_interval_s: float = 10.0
+    bandwidth_gbps: float = 100.0          # Omni-Path (paper §5)
+    spawn_base_s: float = 0.2
+    spawn_per_proc_s: float = 0.002
+    idle_w: float = 100.0                  # Appendix B
+    loaded_w: float = 340.0
+    record_timeline: bool = True
+    # beyond-paper: straggler model — a slow node throttles its whole job
+    # (synchronous iterations); malleable jobs shrink the slow node away.
+    straggler_mtbf_s: float = 0.0          # 0 = disabled
+    straggler_slowdown: float = 0.6
+    straggler_seed: int = 0
+
+
+@dataclasses.dataclass
+class Timeline:
+    t: List[float] = dataclasses.field(default_factory=list)
+    allocated: List[int] = dataclasses.field(default_factory=list)
+    running: List[int] = dataclasses.field(default_factory=list)
+    completed: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class SimResult:
+    jobs: List[Job]
+    makespan: float
+    alloc_rate: float                      # time-averaged allocated fraction
+    energy_kwh: float
+    n_resizes: int
+    resize_overhead_s: float
+    timeline: Timeline
+    n_stragglers: int = 0
+    n_straggler_mitigations: int = 0
+
+    def mean(self, fn) -> float:
+        return float(np.mean([fn(j) for j in self.jobs]))
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "makespan_s": self.makespan,
+            "mean_wait_s": self.mean(Job.waiting),
+            "mean_exec_s": self.mean(Job.execution),
+            "mean_completion_s": self.mean(Job.completion),
+            "alloc_rate": self.alloc_rate,
+            "energy_kwh": self.energy_kwh,
+            "throughput_jps": len(self.jobs) / self.makespan,
+            "n_resizes": self.n_resizes,
+        }
+
+
+class Simulator:
+    def __init__(self, jobs: List[Job], config: Optional[SimConfig] = None):
+        self.cfg = config or SimConfig()
+        self.jobs = sorted(jobs, key=lambda j: j.submit_time)
+        for j in self.jobs:                     # reset runtime state
+            j.start_time = j.end_time = -1.0
+            j.nprocs = 0
+            j.remaining_work = 1.0
+            j.boosted = False
+            j.next_reconfig_ok = 0.0
+            j.straggling = False
+
+    # ------------------------------------------------------------------
+    def _resize_overhead(self, job: Job, new_p: int) -> float:
+        xfer = job.app.state_mb / (self.cfg.bandwidth_gbps * 125.0)
+        return xfer + self.cfg.spawn_base_s + self.cfg.spawn_per_proc_s * new_p
+
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        pending: List[Job] = []
+        running: List[Job] = []
+        completed: List[Job] = []
+        free = cfg.nodes
+        now = 0.0
+        arr_i = 0
+        version: Dict[int, int] = {}
+        comp_heap: List[Tuple[float, int, int]] = []   # (time, ver, jid)
+        by_id = {j.jid: j for j in self.jobs}
+        node_sec_alloc = 0.0
+        n_resizes = 0
+        resize_overhead = 0.0
+        n_stragglers = 0
+        n_mitigations = 0
+        strag_rng = np.random.default_rng(cfg.straggler_seed)
+        timeline = Timeline()
+
+        def _rate(j: Job) -> float:
+            r = j.rate(j.nprocs)
+            return r * cfg.straggler_slowdown if j.straggling else r
+
+        def advance(to: float):
+            nonlocal node_sec_alloc, now
+            dt = to - now
+            if dt <= 0:
+                now = max(now, to)
+                return
+            alloc = sum(j.nprocs for j in running)
+            node_sec_alloc += alloc * dt
+            for j in running:
+                eff_start = max(now, j.last_update)   # paused during overhead
+                if to > eff_start:
+                    j.remaining_work -= (to - eff_start) * _rate(j)
+            now = to
+
+        def schedule_completion(j: Job):
+            version[j.jid] = version.get(j.jid, 0) + 1
+            pause = max(0.0, j.last_update - now)
+            t_done = now + pause + max(j.remaining_work, 0.0) / _rate(j)
+            heapq.heappush(comp_heap, (t_done, version[j.jid], j.jid))
+
+        def start_job(j: Job, p: int):
+            nonlocal free
+            j.nprocs = p
+            j.start_time = now
+            j.last_update = now
+            j.next_reconfig_ok = now + j.app.params.sched_period_s
+            free -= p
+            running.append(j)
+            schedule_completion(j)
+
+        def try_schedule():
+            nonlocal free
+            # multifactor: boosted (post-shrink beneficiaries) first, then age
+            order = sorted(pending, key=lambda j: (not j.boosted,
+                                                   j.submit_time))
+            for j in order:
+                lo, hi = j.request()
+                if j.moldable:
+                    if free >= lo:
+                        start_job(j, min(free, hi))
+                        pending.remove(j)
+                else:
+                    if free >= hi:
+                        start_job(j, hi)
+                        pending.remove(j)
+                # else: backfill semantics — keep scanning later jobs
+
+        def straggler_pass():
+            nonlocal n_stragglers, n_mitigations, free
+            if not cfg.straggler_mtbf_s or not running:
+                return
+            # Poisson arrivals of slow nodes across the allocated fleet
+            p = cfg.backfill_interval_s * len(running) / cfg.straggler_mtbf_s
+            if strag_rng.random() < min(p, 1.0):
+                victim = running[int(strag_rng.integers(len(running)))]
+                if not victim.straggling:
+                    victim.straggling = True
+                    n_stragglers += 1
+                    schedule_completion(victim)
+            # mitigation: malleable jobs shrink the slow node away
+            for j in running:
+                if j.straggling and j.malleable and \
+                        j.nprocs > j.app.params.min_procs:
+                    sizes = [s for s in j.app.params.legal_sizes()
+                             if s < j.nprocs]
+                    if not sizes:
+                        continue
+                    tgt = max(sizes)
+                    free += j.nprocs - tgt
+                    j.nprocs = tgt
+                    j.straggling = False
+                    j.last_update = now + self._resize_overhead(j, tgt)
+                    n_mitigations += 1
+                    schedule_completion(j)
+
+        def malleability_pass():
+            nonlocal free, n_resizes, resize_overhead
+            for j in sorted(running, key=lambda x: x.next_reconfig_ok):
+                if not j.malleable or now < j.next_reconfig_ok:
+                    continue
+                reclaimable = sum(
+                    max(0, o.nprocs - o.app.params.preferred)
+                    for o in running if o.malleable and o is not j)
+                view = ClusterView(
+                    available=free,
+                    pending_min_sizes=[p.request()[0] for p in pending],
+                    reclaimable_others=reclaimable)
+                act = decide(j.nprocs, j.app.params, view)
+                if act.kind == "none" or act.target == j.nprocs:
+                    continue
+                # settle progress before the resize
+                ovh = self._resize_overhead(j, act.target)
+                if act.kind == "expand":
+                    grab = act.target - j.nprocs
+                    if grab > free:
+                        continue
+                    free -= grab
+                else:
+                    released = j.nprocs - act.target
+                    free += released
+                    # paper: the enabled pending job gets the highest priority
+                    for p in sorted(pending, key=lambda x: x.submit_time):
+                        if p.request()[0] <= free:
+                            p.boosted = True
+                            break
+                j.nprocs = act.target
+                j.last_update = now + ovh
+                j.next_reconfig_ok = now + max(
+                    j.app.params.sched_period_s,
+                    j.app.step_time(j.nprocs), cfg.backfill_interval_s)
+                n_resizes += 1
+                resize_overhead += ovh
+                schedule_completion(j)
+
+        next_tick = 0.0
+        total_jobs = len(self.jobs)
+        while len(completed) < total_jobs:
+            # next event time
+            t_arr = self.jobs[arr_i].submit_time if arr_i < total_jobs else np.inf
+            t_comp = comp_heap[0][0] if comp_heap else np.inf
+            t_next = min(t_arr, t_comp, next_tick)
+            advance(t_next)
+
+            progressed = False
+            if arr_i < total_jobs and now >= t_arr - 1e-9:
+                pending.append(self.jobs[arr_i])
+                arr_i += 1
+                progressed = True
+            while comp_heap and comp_heap[0][0] <= now + 1e-9:
+                _, ver, jid = heapq.heappop(comp_heap)
+                j = by_id[jid]
+                if version.get(jid) != ver or j.end_time >= 0:
+                    continue
+                if j.remaining_work > 1e-9:      # stale (resized): reschedule
+                    schedule_completion(j)
+                    continue
+                j.end_time = now
+                running.remove(j)
+                free += j.nprocs
+                completed.append(j)
+                progressed = True
+            if now >= next_tick - 1e-9:
+                try_schedule()
+                straggler_pass()
+                malleability_pass()
+                if cfg.record_timeline:
+                    timeline.t.append(now)
+                    timeline.allocated.append(cfg.nodes - free)
+                    timeline.running.append(len(running))
+                    timeline.completed.append(len(completed))
+                next_tick = now + cfg.backfill_interval_s
+            elif progressed:
+                try_schedule()
+
+        makespan = now
+        alloc_rate = node_sec_alloc / (cfg.nodes * makespan) if makespan else 0.0
+        energy_kwh = (node_sec_alloc * cfg.loaded_w +
+                      (cfg.nodes * makespan - node_sec_alloc) * cfg.idle_w) \
+            / 3600.0 / 1000.0
+        return SimResult(jobs=self.jobs, makespan=makespan,
+                         alloc_rate=alloc_rate, energy_kwh=energy_kwh,
+                         n_resizes=n_resizes,
+                         resize_overhead_s=resize_overhead,
+                         timeline=timeline, n_stragglers=n_stragglers,
+                         n_straggler_mitigations=n_mitigations)

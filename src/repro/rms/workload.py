@@ -1,0 +1,163 @@
+"""Workload model: application profiles, job classes, Feitelson arrivals.
+
+Reproduces the paper's §5.2-5.4 setup: four applications with distinct
+scalability personalities (Table 4/5), two submission modes (Table 6), four
+job classes (Table 3), and factor-1 Feitelson (Poisson) inter-arrival times.
+
+Execution-time models are Amdahl-type ``t(p) = t1*((1-f) + f/p) + c*(p-1)``
+calibrated so the 10%-threshold *gain difference* heuristic (§5.3, Fig. 3)
+yields exactly the paper's Table-5 malleability parameters — verified by
+``benchmarks/scaling_study.py`` and tests/test_rms.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.params import MalleabilityParams
+
+
+@dataclasses.dataclass(frozen=True)
+class AppProfile:
+    name: str
+    t1: float                    # single-worker completion time (s)
+    f: float                     # parallel fraction
+    alpha: float                 # scaling exponent: t ~ p^-alpha
+    c: float                     # per-worker comm/overhead cost (s)
+    min_start: int               # minimum workers to run at all
+    params: MalleabilityParams   # Table 5
+    state_mb: float              # resident state (drives resize overhead)
+    iterations: int              # Table 4 (sets the reconfig granularity)
+
+    def exec_time(self, p: int) -> float:
+        return self.t1 * ((1 - self.f) + self.f / p ** self.alpha) \
+            + self.c * (p - 1)
+
+    def gain_difference(self, p: int, pmin: Optional[int] = None) -> float:
+        """Paper §5.3: s(p) = (t(p_prev) - t(p)) / t(min_procs) * 100."""
+        pmin = pmin or self.min_start
+        if p <= pmin:
+            return 100.0
+        return (self.exec_time(p // 2) - self.exec_time(p)) / \
+            self.exec_time(pmin) * 100.0
+
+    def step_time(self, p: int) -> float:
+        return self.exec_time(p) / self.iterations
+
+
+# Table 4/5 — constants calibrated so the 10%-threshold derivation over the
+# doubling configurations reproduces Table 5 exactly (tests/test_rms.py):
+#   CG     scalable:   lower 2, pref 16, upper 32
+#   Jacobi mid:        lower 2, pref 4,  upper 32
+#   N-body flat:       lower 1, pref 1,  upper 32 (never exceeds 10%)
+#   HPG    I/O bound:  lower 6, pref 6,  upper 12 (min 3 workers: r/w + 1)
+APPS: Dict[str, AppProfile] = {
+    "cg": AppProfile(
+        name="cg", t1=4000.0, f=1.0, alpha=0.30, c=0.0, min_start=1,
+        params=MalleabilityParams(2, 32, 16, sched_period_s=10.0),
+        state_mb=4 * 32768 * 8 / 1e6 + 32768 ** 2 * 8 / 1e6,
+        iterations=10_000),
+    "jacobi": AppProfile(
+        name="jacobi", t1=1500.0, f=1.0, alpha=0.18, c=0.0, min_start=1,
+        params=MalleabilityParams(2, 32, 4, sched_period_s=10.0),
+        state_mb=2 * 16384 * 8 / 1e6 + 16384 ** 2 * 8 / 1e6,
+        iterations=10_000),
+    "nbody": AppProfile(
+        name="nbody", t1=900.0, f=1.0, alpha=0.05, c=0.0, min_start=1,
+        params=MalleabilityParams(1, 32, 1),
+        state_mb=6_553_600 * 32 / 1e6,
+        iterations=50),
+    "hpg": AppProfile(
+        name="hpg", t1=2400.0, f=1.0, alpha=0.30, c=0.008 * 2400, min_start=3,
+        params=MalleabilityParams(6, 12, 6),
+        state_mb=40e6 * 100 / 1e6 / 40,     # active chunk of the read set
+        iterations=24),                      # #workers x 4
+}
+
+
+@dataclasses.dataclass
+class Job:
+    jid: int
+    app: AppProfile
+    submit_time: float
+    moldable: bool               # submission mode (Table 6)
+    malleable: bool              # can resize at runtime
+    # -- runtime state (filled by the simulator) --
+    start_time: float = -1.0
+    end_time: float = -1.0
+    nprocs: int = 0
+    remaining_work: float = 1.0  # normalized
+    last_update: float = 0.0
+    next_reconfig_ok: float = 0.0
+    boosted: bool = False        # paper: job that triggered a shrink gets top priority
+    straggling: bool = False     # a slow node throttles the whole job
+
+    @property
+    def cls(self) -> str:
+        """Table 3 naming."""
+        if not self.moldable and not self.malleable:
+            return "fixed"
+        if self.moldable and not self.malleable:
+            return "pure-moldable"
+        if not self.moldable and self.malleable:
+            return "pure-malleable"
+        return "flexible"
+
+    def request(self) -> tuple:
+        """(min, max) workers requested at submission (Table 6)."""
+        p = self.app.params
+        if self.moldable:
+            return (p.min_procs, p.max_procs)
+        return (p.max_procs, p.max_procs)   # rigid: users ask for the upper limit
+
+    def rate(self, p: int) -> float:
+        """Normalized work per second at p workers."""
+        return 1.0 / self.app.exec_time(p)
+
+    def waiting(self) -> float:
+        return self.start_time - self.submit_time
+
+    def execution(self) -> float:
+        return self.end_time - self.start_time
+
+    def completion(self) -> float:
+        return self.end_time - self.submit_time
+
+
+def feitelson_arrivals(n_jobs: int, rng: np.random.Generator,
+                       factor: float = 1.0, mean_s: float = 18.0) -> np.ndarray:
+    """Factor-1 Feitelson-style Poisson arrivals (§5.4): exponential
+    inter-arrival, heavily stressed queue."""
+    gaps = rng.exponential(mean_s * factor, size=n_jobs)
+    return np.cumsum(gaps)
+
+
+def make_workload(n_jobs: int, *, moldable: bool, malleable, seed: int = 0,
+                  app_names: Optional[List[str]] = None,
+                  malleable_fraction: float = 1.0,
+                  malleable_only_app: Optional[str] = None) -> List[Job]:
+    """Random mixed workload (§5.4 / §5.6).
+
+    ``malleable`` may be a bool (all jobs) and is refined by
+    ``malleable_fraction`` (Table 7 percentages) or ``malleable_only_app``
+    (Table 7 per-app columns).
+    """
+    rng = np.random.default_rng(seed)
+    names = app_names or list(APPS)
+    arrivals = feitelson_arrivals(n_jobs, rng)
+    picks = rng.integers(0, len(names), size=n_jobs)
+    mall_draw = rng.random(n_jobs)
+    jobs = []
+    for i in range(n_jobs):
+        app = APPS[names[picks[i]]]
+        m = bool(malleable)
+        if m and malleable_fraction < 1.0:
+            m = mall_draw[i] < malleable_fraction
+        if malleable_only_app is not None:
+            m = app.name == malleable_only_app
+        jobs.append(Job(jid=i, app=app, submit_time=float(arrivals[i]),
+                        moldable=moldable, malleable=m))
+    return jobs

@@ -1,0 +1,85 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+ATTN_CASES = [
+    # (B, H, Hkv, Sq, Sk, D, causal, window, dtype)
+    (2, 4, 2, 256, 256, 64, True, 0, jnp.float32),
+    (1, 8, 8, 128, 128, 128, False, 0, jnp.float32),
+    (2, 4, 1, 256, 256, 64, True, 64, jnp.float32),
+    (1, 2, 2, 128, 128, 64, True, 0, jnp.bfloat16),
+    (1, 4, 2, 64, 64, 32, True, 0, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("B,H,Hkv,Sq,Sk,D,causal,window,dtype", ATTN_CASES)
+def test_flash_attention(B, H, Hkv, Sq, Sk, D, causal, window, dtype):
+    q = _rand((B, H, Sq, D), dtype)
+    k = _rand((B, Hkv, Sk, D), dtype)
+    v = _rand((B, Hkv, Sk, D), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_k=64)
+    exp = ref.attention_reference(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+SSD_CASES = [
+    (2, 4, 256, 32, 16, 64, jnp.float32),
+    (1, 2, 128, 64, 128, 32, jnp.float32),
+    (1, 2, 128, 32, 16, 128, jnp.float32),   # single chunk
+    (2, 2, 64, 16, 16, 16, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("B,H,S,P,N,Q,dtype", SSD_CASES)
+def test_ssd_scan(B, H, S, P, N, Q, dtype):
+    xdt = _rand((B, H, S, P), dtype) * 0.3
+    a = -jnp.abs(_rand((B, H, S), jnp.float32)) * 0.4
+    bm = _rand((B, S, N), dtype) * 0.3
+    cm = _rand((B, S, N), dtype) * 0.3
+    out = ops.ssd_scan(xdt, a, bm, cm, chunk=Q)
+    exp = ref.ssd_reference(xdt, a, bm, cm)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+def test_ssd_matches_model_chunked():
+    """Kernel == the model's pure-JAX chunked path (same contract)."""
+    from repro.models.ssm import ssd_chunked
+    B, H, S, P, N = 2, 4, 128, 16, 32
+    x = _rand((B, S, H, P), jnp.float32) * 0.3
+    dt = jnp.abs(_rand((B, S, H), jnp.float32)) * 0.5 + 0.1
+    A = -jnp.abs(_rand((H,), jnp.float32)) - 0.5
+    bm = _rand((B, S, N), jnp.float32) * 0.3
+    cm = _rand((B, S, N), jnp.float32) * 0.3
+    y_model, _ = ssd_chunked(x, dt, A, bm, cm, chunk=32)
+    xdt = jnp.moveaxis(x * dt[..., None], 1, 2)              # (B,H,S,P)
+    a = jnp.moveaxis(dt * A[None, None, :], 1, 2)
+    y_kernel = ops.ssd_scan(xdt, a, bm, cm, chunk=32)
+    np.testing.assert_allclose(np.moveaxis(np.asarray(y_kernel), 1, 2),
+                               np.asarray(y_model), atol=5e-4, rtol=5e-4)
+
+
+@pytest.mark.parametrize("nblocks,block,width,nout", [
+    (16, 8, 32, 10), (8, 16, 16, 8), (32, 8, 128, 32)])
+def test_repack(nblocks, block, width, nout):
+    src = _rand((nblocks, block, width), jnp.float32)
+    idx = jnp.asarray(RNG.permutation(nblocks)[:nout], jnp.int32)
+    out = ops.repack(src, idx)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.repack_reference(src, idx)))

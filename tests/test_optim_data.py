@@ -1,0 +1,77 @@
+"""Optimizer, schedules, gradient compression, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import SMOKE_SHAPE, ShapeConfig
+from repro.data.pipeline import SyntheticDataset, make_batch
+from repro.optim import AdamW, cosine_schedule, linear_warmup
+from repro.optim.compression import compress_int8, decompress_int8
+
+
+def test_adamw_quadratic_convergence():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = opt.update(grads, state, params)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_grad_clip():
+    opt = AdamW(learning_rate=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    _, _, gnorm = opt.update({"w": jnp.full(4, 100.0)}, state, params)
+    assert float(gnorm) == 200.0                   # pre-clip norm reported
+
+
+def test_schedules():
+    lr = cosine_schedule(1.0, 10, 100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(100))) <= 0.11
+    wu = linear_warmup(2.0, 4)
+    assert float(wu(jnp.int32(2))) == 1.0
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1,
+                max_size=64))
+def test_int8_compression_bounded_error(vals):
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, scale = compress_int8(x)
+    err = np.max(np.abs(np.asarray(decompress_int8(q, scale) - x)))
+    amax = float(np.max(np.abs(np.asarray(x))))
+    assert err <= amax / 127.0 + 1e-6              # half-ulp of the int8 grid
+
+
+def test_data_determinism_and_cursor():
+    cfg = get_config("granite-3-2b-smoke")
+    ds = SyntheticDataset(cfg, SMOKE_SHAPE, seed=1)
+    a = ds.batch_at(100)
+    b = ds.batch_at(100)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = ds.batch_at(101)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_worker_split_equivalence():
+    """Worker w of W sees exactly the rows a single worker would produce."""
+    cfg = get_config("granite-3-2b-smoke")
+    shape = ShapeConfig("t", "train", 32, 8)
+    whole = SyntheticDataset(cfg, shape, seed=0).batch_at(0)["tokens"]
+    ds2 = SyntheticDataset(cfg, shape, seed=0, global_batch=4)
+    w0 = ds2.batch_at(0)["tokens"]
+    w1 = ds2.batch_at(4)["tokens"]
+    np.testing.assert_array_equal(np.concatenate([w0, w1]), whole)
+
+
+def test_data_has_learnable_structure():
+    cfg = get_config("granite-3-2b-smoke")
+    t = make_batch(cfg, SMOKE_SHAPE)["tokens"]
+    succ = (t[:, 1:] == (31 * t[:, :-1] + 17) % cfg.vocab_size).mean()
+    assert succ > 0.8                              # affine-successor pattern

@@ -1,0 +1,91 @@
+"""Algorithm 2 branch coverage + malleability-parameter invariants."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Action, ClusterView, MalleabilityParams, decide,
+                        expansion_target, shrink_target)
+
+
+def P(lo, hi, pref):
+    return MalleabilityParams(lo, hi, pref)
+
+
+# -- Algorithm 2 branches ----------------------------------------------
+
+def test_line2_expand_when_below_preferred():
+    a = decide(4, P(2, 32, 16), ClusterView(available=28, pending_min_sizes=[]))
+    assert a.kind == "expand" and a.target > 4
+
+
+def test_line2_no_resources_no_action():
+    a = decide(4, P(2, 32, 16), ClusterView(available=0, pending_min_sizes=[32]))
+    assert a.kind == "none"
+
+
+def test_line6_shrink_enables_pending_job():
+    # running at 32 (> pref 16); pending needs 12; shrink releases 16
+    a = decide(32, P(2, 32, 16), ClusterView(available=0,
+                                             pending_min_sizes=[12]))
+    assert a.kind == "shrink" and a.target == 16
+
+
+def test_line6_no_shrink_if_pending_cannot_start():
+    # releasing 16 still can't start a 32-wide pending job
+    a = decide(32, P(2, 32, 16), ClusterView(available=0,
+                                             pending_min_sizes=[32]))
+    assert a.kind == "none"
+
+
+def test_line6_never_shrinks_below_preferred():
+    a = decide(16, P(2, 32, 16), ClusterView(available=0,
+                                             pending_min_sizes=[2]))
+    assert a.kind == "none"      # current == preferred: no shrink allowed
+
+
+def test_line8_expand_below_pref_with_pending_capped_at_pref():
+    # below preferred: grow, but never past preferred while others queue
+    a = decide(4, P(2, 32, 16), ClusterView(available=28,
+                                            pending_min_sizes=[64]))
+    assert a.kind == "expand" and a.target == 16
+    # at preferred with a full queue: hold (expanding would fight line 6)
+    a = decide(16, P(2, 32, 16), ClusterView(available=16,
+                                             pending_min_sizes=[64]))
+    assert a.kind == "none"
+
+
+def test_line10_expand_when_idle():
+    a = decide(16, P(2, 32, 16), ClusterView(available=16,
+                                             pending_min_sizes=[]))
+    assert a.kind == "expand" and a.target == 32
+
+
+# -- invariants (property-based) ----------------------------------------
+
+params_st = st.tuples(st.sampled_from([1, 2, 4]), st.sampled_from([8, 16, 32]),
+                      st.sampled_from([4, 8])).map(
+    lambda t: MalleabilityParams(t[0], t[1], max(t[0], min(t[2], t[1]))))
+
+
+@settings(max_examples=200, deadline=None)
+@given(params=params_st, current=st.sampled_from([1, 2, 4, 8, 16, 32]),
+       avail=st.integers(0, 64), pending=st.lists(st.integers(1, 64),
+                                                  max_size=3))
+def test_decide_invariants(params, current, avail, pending):
+    current = params.clamp(current)
+    a = decide(current, params, ClusterView(avail, pending))
+    assert a.kind in ("expand", "shrink", "none")
+    if a.kind == "expand":
+        assert current < a.target <= params.max_procs
+        assert a.target - current <= avail
+    if a.kind == "shrink":
+        assert params.preferred <= a.target < current
+        assert pending                      # shrink only serves the queue
+
+
+@settings(max_examples=100, deadline=None)
+@given(params=params_st, avail=st.integers(0, 64))
+def test_targets_legal(params, avail):
+    for cur in params.legal_sizes():
+        t = expansion_target(cur, params, avail)
+        assert cur <= t <= params.max_procs
+        s = shrink_target(cur, params)
+        assert params.preferred <= s <= cur or s == cur

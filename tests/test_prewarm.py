@@ -1,0 +1,31 @@
+"""AOT prewarm: resizes onto prewarmed meshes skip compilation entirely."""
+from tests.util import run_devices
+
+SCRIPT = r"""
+import warnings; warnings.filterwarnings("ignore")
+import jax
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core import MalleableRunner, MalleabilityParams, ScriptedRMS
+from repro.core.lm_app import LMTrainApp
+
+cfg = get_config("mamba2-370m-smoke")
+app = LMTrainApp(cfg, ShapeConfig("t", "train", 64, 8))
+runner = MalleableRunner(app, MalleabilityParams(2, 8, 4),
+                         ScriptedRMS({2: 8, 4: 2}))
+warm_s = runner.prewarm()
+assert warm_s > 0
+state = runner.init()
+for i in range(6):
+    state = runner.maybe_reconfig(state, i)
+    state, m = runner.step(state, i)
+# both resizes hit the prewarmed executable cache: no recompilation
+assert len(runner.events) == 2
+assert all(e.recompile_s < 0.05 for e in runner.events), runner.events
+print("PREWARM_OK", warm_s)
+"""
+
+
+def test_prewarm_makes_resizes_compile_free():
+    out = run_devices(SCRIPT, n_devices=8)
+    assert "PREWARM_OK" in out

@@ -1,0 +1,68 @@
+"""Property-based tests for the Table-1 redistribution patterns."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.redistribute import (blockcyclic_merge,
+                                     blockcyclic_redistribute,
+                                     blockcyclic_split,
+                                     default_redistribution,
+                                     redistribute_state, state_bytes)
+
+pows2 = st.sampled_from([1, 2, 4, 8, 16])
+
+
+@settings(max_examples=50, deadline=None)
+@given(old=pows2, new=pows2, rows_per=st.integers(1, 8),
+       width=st.integers(1, 4))
+def test_default_redistribution_preserves_data(old, new, rows_per, width):
+    total_rows = old * new * rows_per          # divisible by both
+    data = np.arange(total_rows * width, dtype=np.float64).reshape(
+        total_rows, width)
+    parts = list(np.split(data, old, axis=0))
+    out = default_redistribution(parts, new)
+    assert len(out) == new
+    np.testing.assert_array_equal(np.concatenate(out, axis=0), data)
+    sizes = {p.shape[0] for p in out}
+    assert len(sizes) == 1                      # uniform 1-D distribution
+
+
+@settings(max_examples=50, deadline=None)
+@given(nprocs=pows2, nblocks_per=st.integers(1, 6), block=st.integers(1, 8))
+def test_blockcyclic_roundtrip(nprocs, nblocks_per, block):
+    n = nprocs * nblocks_per * block
+    data = np.arange(n, dtype=np.int64)
+    parts = blockcyclic_split(data, nprocs, block)
+    np.testing.assert_array_equal(blockcyclic_merge(parts, block), data)
+
+
+@settings(max_examples=50, deadline=None)
+@given(old=pows2, new=pows2, k=st.integers(1, 4), block=st.integers(1, 4))
+def test_blockcyclic_redistribute(old, new, k, block):
+    n = old * new * k * block
+    data = np.arange(n, dtype=np.int64)
+    parts = blockcyclic_split(data, old, block)
+    out = blockcyclic_redistribute(parts, new, block)
+    assert len(out) == new
+    np.testing.assert_array_equal(blockcyclic_merge(out, block), data)
+
+
+def test_expand_then_shrink_identity():
+    data = np.arange(256.0).reshape(64, 4)
+    parts = [data[:32], data[32:]]
+    out = default_redistribution(default_redistribution(parts, 8), 2)
+    np.testing.assert_array_equal(np.concatenate(out), data)
+
+
+def test_redistribute_state_values_exact():
+    state = {"a": jnp.arange(37, dtype=jnp.float32),
+             "b": {"c": jnp.ones((3, 5), jnp.bfloat16)},
+             "n": jnp.int32(7)}
+    dev = jax.devices()[0]
+    shardings = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev),
+                             state)
+    moved, stats = redistribute_state(state, shardings, donate=False)
+    assert stats.bytes_moved == state_bytes(state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(moved)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,81 @@
+"""Simulator: Table-5 derivation, invariants, and paper-directional results."""
+import numpy as np
+import pytest
+
+from repro.rms import APPS, SimConfig, Simulator, make_workload
+
+
+def derive_table5(app):
+    ps = [6, 12, 24] if app.name == "hpg" else [2, 4, 8, 16, 32]
+    g = {p: app.gain_difference(p, app.min_start) for p in ps}
+    above = [p for p in ps if g[p] >= 10]
+    nonneg = [p for p in ps if g[p] >= 0]
+    lower = above[0] if above else 1
+    pref = above[-1] if above else 1
+    upper = nonneg[-1] if nonneg else 1
+    return lower, pref, upper
+
+
+@pytest.mark.parametrize("name,expect", [
+    ("cg", (2, 16, 32)), ("jacobi", (2, 4, 32)),
+    ("nbody", (1, 1, 32)), ("hpg", (6, 6, 12))])
+def test_table5_derivation(name, expect):
+    assert derive_table5(APPS[name]) == expect
+
+
+def _run(n, mold, mall, seed=42):
+    return Simulator(make_workload(n, moldable=mold, malleable=mall,
+                                   seed=seed), SimConfig()).run()
+
+
+def test_all_jobs_complete_and_invariants():
+    res = _run(60, True, True)
+    assert all(j.end_time >= j.start_time >= j.submit_time >= 0
+               for j in res.jobs)
+    assert max(res.timeline.allocated) <= SimConfig().nodes   # no over-alloc
+    assert res.timeline.completed[-1] <= len(res.jobs)
+    assert 0 < res.alloc_rate <= 1.0
+
+
+def test_determinism():
+    a = _run(40, False, True).summary()
+    b = _run(40, False, True).summary()
+    assert a == b
+
+
+def test_workload_class_ordering():
+    """Paper §5.5 directionality: flexible beats everything; malleability
+    improves completion time for both submission modes; energy drops."""
+    fixed = _run(80, False, False).summary()
+    malleable = _run(80, False, True).summary()
+    moldable = _run(80, True, False).summary()
+    flexible = _run(80, True, True).summary()
+    assert malleable["mean_completion_s"] < fixed["mean_completion_s"]
+    assert flexible["mean_completion_s"] < moldable["mean_completion_s"]
+    assert flexible["mean_completion_s"] < fixed["mean_completion_s"]
+    assert flexible["energy_kwh"] < fixed["energy_kwh"]
+    # paper: >3x on completion for the best case vs fixed
+    assert fixed["mean_completion_s"] / flexible["mean_completion_s"] > 2.0
+
+
+def test_malleable_jobs_resize():
+    res = _run(50, False, True)
+    assert res.n_resizes > 0
+    assert res.resize_overhead_s > 0
+
+
+def test_rigid_jobs_never_resize():
+    res = _run(50, False, False)
+    assert res.n_resizes == 0
+
+
+def test_partial_malleability_monotonic():
+    """Table 7: completion time improves with the malleable fraction."""
+    times = []
+    for frac in (0.0, 0.5, 1.0):
+        jobs = make_workload(80, moldable=False, malleable=True, seed=7,
+                             malleable_fraction=frac)
+        times.append(Simulator(jobs, SimConfig()).run()
+                     .summary()["mean_completion_s"])
+    assert times[2] < times[0]
+    assert times[1] < times[0] * 1.05

@@ -1,0 +1,26 @@
+"""Test helpers: subprocess runner for multi-device tests.
+
+The main pytest process keeps the default single CPU device (smoke tests
+must see 1 device); anything needing host-platform device farms runs in a
+child interpreter with its own XLA_FLAGS.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_devices(script: str, n_devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["PYTHONWARNINGS"] = "ignore"
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"subprocess failed:\nSTDOUT:\n{proc.stdout[-4000:]}\n"
+        f"STDERR:\n{proc.stderr[-4000:]}")
+    return proc.stdout
