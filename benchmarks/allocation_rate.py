@@ -1,9 +1,11 @@
-"""Fig. 9 — resource-allocation rate per configuration per workload size."""
+"""Fig. 9 — resource-allocation rate per configuration per workload size,
+plus a per-policy allocation-rate sweep (each built-in malleability policy
+under both submission modes, projected from the shared policy matrix)."""
 from __future__ import annotations
 
 from benchmarks.common import report, timer, write_csv
 from repro.rms import SimConfig, Simulator, make_workload
-from benchmarks.submission_modes import CLASSES, SIZES
+from benchmarks.submission_modes import CLASSES, SIZES, policy_matrix_rows
 
 
 def run(sizes=SIZES):
@@ -16,11 +18,18 @@ def run(sizes=SIZES):
                     .summary()
                 rows.append({"jobs": n, "class": label,
                              "alloc_rate_pct": round(100 * s["alloc_rate"], 2)})
+        # beyond-paper: allocation rate per policy x submission mode
+        prows = [{"policy": r["policy"], "mode": r["mode"],
+                  "alloc_rate_pct": r["alloc_rate_pct"]}
+                 for r in policy_matrix_rows()]
     path = write_csv("fig9_allocation_rate", rows)
+    ppath = write_csv("fig9_allocation_rate_policies", prows)
+
     small = {r["class"]: r["alloc_rate_pct"] for r in rows if r["jobs"] == 100}
     report("fig9_allocation_rate", t.seconds,
            f"pure_moldable_100jobs={small['pure-moldable']}%"
-           f";flexible_100jobs={small['flexible']}%;csv={path}")
+           f";flexible_100jobs={small['flexible']}%;csv={path}"
+           f";policy_csv={ppath}")
 
 
 if __name__ == "__main__":

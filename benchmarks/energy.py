@@ -1,10 +1,12 @@
 """Fig. 10 / Appendix B — energy to complete each workload vs the fixed
-reference (idle 100 W / loaded 340 W per node), plus the TPU-constant study."""
+reference (idle 100 W / loaded 340 W per node), plus the TPU-constant study
+and a per-policy energy sweep (the energy-aware shrink-first policy is built
+on the same Appendix-B wattage model it is measured against here)."""
 from __future__ import annotations
 
 from benchmarks.common import report, timer, write_csv
 from repro.rms import SimConfig, Simulator, make_workload
-from benchmarks.submission_modes import CLASSES
+from benchmarks.submission_modes import CLASSES, policy_matrix_rows
 
 SIZES = [100, 250, 500, 1000]
 
@@ -33,12 +35,25 @@ def run(sizes=SIZES):
                         "pct_of_fixed": round(100 * s["energy_kwh"] / ref, 1)
                         if variant == "paper" else "",
                     })
+    # beyond-paper: energy per policy x submission mode (projected from the
+    # shared policy matrix — one simulation grid for all three benchmarks)
+    with timer() as t2:
+        prows = [{"policy": r["policy"], "mode": r["mode"],
+                  "energy_kwh": r["energy_kwh"],
+                  "pct_of_static": r["energy_vs_static_pct"]}
+                 for r in policy_matrix_rows()]
+    ppath = write_csv("fig10_energy_policies", prows)
+
     path = write_csv("fig10_energy", rows)
     r1000 = {r["class"]: r for r in rows
              if r["jobs"] == 1000 and r["constants"] == "paper"}
-    report("fig10_energy", t.seconds,
+    by = {(r["policy"], r["mode"]): r for r in prows}
+    report("fig10_energy", t.seconds + t2.seconds,
            f"flexible_energy_pct_of_fixed_1000="
-           f"{r1000['flexible']['pct_of_fixed']}%;csv={path}")
+           f"{r1000['flexible']['pct_of_fixed']}%"
+           f";energy_aware_moldable_pct_of_static="
+           f"{by[('energy-aware', 'moldable')]['pct_of_static']}%"
+           f";csv={path};policy_csv={ppath}")
 
 
 if __name__ == "__main__":

@@ -11,8 +11,8 @@ import traceback
 from benchmarks import (allocation_rate, energy, fault_tolerance,
                         kernels_bench, partial_malleability, per_job_times,
                         redistribution_overhead, scaling_study,
-                        submission_modes, tpu_lm_workload, usability_sloc,
-                        workload_evolution, workload_speedup)
+                        scenario_suite, submission_modes, tpu_lm_workload,
+                        usability_sloc, workload_evolution, workload_speedup)
 
 BENCHES = [
     ("fig3", scaling_study),
@@ -28,6 +28,7 @@ BENCHES = [
     ("kernels", kernels_bench),
     ("tpu_lm", tpu_lm_workload),
     ("straggler", fault_tolerance),
+    ("scenarios", scenario_suite),
 ]
 
 

@@ -1,16 +1,24 @@
 """Fig. 8a/8b — workload completion time and mean job execution time for the
-four configurations, grouped by workload size."""
+four configurations, grouped by workload size — plus the policy x submission
+mode matrix: each built-in malleability policy ({algorithm2, energy-aware,
+throughput-greedy}) is run under both submission modes ({rigid, moldable})
+against the rigid static baseline, reporting allocation rate,
+completed-jobs/s, and simulated energy.
+"""
 from __future__ import annotations
 
 from benchmarks.common import report, timer, write_csv
-from repro.rms import SimConfig, Simulator, make_workload
+from repro.rms import (MOLDABLE, RIGID, SUBMISSION_MODES, SimConfig,
+                       Simulator, make_workload)
 
 SIZES = [100, 250, 500, 1000]
 CLASSES = [("fixed", False, False), ("pure-malleable", False, True),
            ("pure-moldable", True, False), ("flexible", True, True)]
+POLICY_NAMES = ("algorithm2", "energy-aware", "throughput-greedy")
+MATRIX_JOBS = 300
 
 
-def run(sizes=SIZES):
+def run_fig8(sizes=SIZES):
     rows = []
     with timer() as t:
         for n in sizes:
@@ -33,6 +41,64 @@ def run(sizes=SIZES):
     report("fig8_submission_modes", t.seconds,
            f"flexible_vs_fixed_1000={r1000['flexible']['completion_vs_fixed']}x"
            f";csv={path}")
+
+
+_MATRIX_CACHE = {}
+
+
+def policy_matrix_rows(n_jobs=MATRIX_JOBS, seed=42):
+    """policy x mode sweep vs. the rigid static (non-malleable) baseline.
+
+    Cached per (n_jobs, seed) so allocation_rate / energy can project their
+    columns from one shared simulation grid instead of re-running it."""
+    key = (n_jobs, seed)
+    if key in _MATRIX_CACHE:
+        return _MATRIX_CACHE[key]
+    rows = []
+    base_jobs = make_workload(n_jobs, mode=RIGID, malleable=False, seed=seed)
+    base = Simulator(base_jobs, SimConfig(record_timeline=False)).run() \
+        .summary()
+    rows.append(_matrix_row("static", RIGID, base, base))
+    for pol in POLICY_NAMES:
+        for mode in SUBMISSION_MODES:
+            jobs = make_workload(n_jobs, mode=mode, malleable=True, seed=seed)
+            s = Simulator(jobs, SimConfig(record_timeline=False),
+                          policy=pol).run().summary()
+            rows.append(_matrix_row(pol, mode, s, base))
+    _MATRIX_CACHE[key] = rows
+    return rows
+
+
+def run_policy_matrix(n_jobs=MATRIX_JOBS, seed=42):
+    with timer() as t:
+        rows = policy_matrix_rows(n_jobs, seed)
+    path = write_csv("policy_matrix", rows)
+    by = {(r["policy"], r["mode"]): r for r in rows}
+    best = max(rows, key=lambda r: r["jobs_per_s"])
+    report("policy_matrix", t.seconds,
+           f"alg2_moldable_vs_static="
+           f"{by[('algorithm2', MOLDABLE)]['throughput_vs_static']}x"
+           f";best={best['policy']}/{best['mode']}"
+           f"@{best['jobs_per_s']}jobs_per_s;csv={path}")
+    return rows
+
+
+def _matrix_row(policy, mode, s, base):
+    return {
+        "policy": policy, "mode": mode,
+        "alloc_rate_pct": round(100 * s["alloc_rate"], 2),
+        "jobs_per_s": round(s["throughput_jps"], 5),
+        "energy_kwh": round(s["energy_kwh"], 1),
+        "throughput_vs_static":
+            round(s["throughput_jps"] / base["throughput_jps"], 2),
+        "energy_vs_static_pct":
+            round(100 * s["energy_kwh"] / base["energy_kwh"], 1),
+    }
+
+
+def run(sizes=SIZES):
+    run_fig8(sizes)
+    run_policy_matrix()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,9 @@
+"""Pytest bootstrap: put ``src/`` on ``sys.path`` so ``import repro`` works
+without setting ``PYTHONPATH=src`` by hand.  Benchmarks and examples still
+need ``PYTHONPATH=src`` (they run outside pytest)."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

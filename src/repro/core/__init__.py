@@ -10,7 +10,9 @@ lm_app.py       LM-training MalleableApp over the model zoo
 from repro.core.api import MalleableApp, MalleableRunner, ResizeEvent, dmr_reconfig
 from repro.core.params import (MalleabilityParams, expansion_target,
                                shrink_target)
-from repro.core.policy import Action, ClusterView, decide
+from repro.core.policy import (POLICIES, Action, Algorithm2Policy, BasePolicy,
+                               ClusterView, EnergyAwarePolicy, Policy,
+                               ThroughputGreedyPolicy, decide, get_policy)
 from repro.core.redistribute import (TransferStats, blockcyclic_merge,
                                      blockcyclic_redistribute,
                                      blockcyclic_split,
@@ -22,6 +24,8 @@ __all__ = [
     "MalleableApp", "MalleableRunner", "ResizeEvent", "dmr_reconfig",
     "MalleabilityParams", "expansion_target", "shrink_target",
     "Action", "ClusterView", "decide",
+    "Policy", "BasePolicy", "Algorithm2Policy", "EnergyAwarePolicy",
+    "ThroughputGreedyPolicy", "POLICIES", "get_policy",
     "TransferStats", "blockcyclic_merge", "blockcyclic_redistribute",
     "blockcyclic_split", "default_redistribution", "redistribute_state",
     "state_bytes", "FileRMS", "PolicyRMS", "RMSClient", "ScriptedRMS",

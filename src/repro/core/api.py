@@ -32,9 +32,9 @@ from typing import Any, Callable, Dict, List, Optional, Protocol
 import jax
 
 from repro.core.params import MalleabilityParams
-from repro.core.policy import Action
+from repro.core.policy import Action, ClusterView, Policy, get_policy
 from repro.core.redistribute import TransferStats, redistribute_state
-from repro.core.rms_client import RMSClient
+from repro.core.rms_client import PolicyRMS, RMSClient
 from repro.parallel.mesh import make_job_mesh
 
 
@@ -58,12 +58,14 @@ class ResizeEvent:
 
 class MalleableRunner:
     def __init__(self, app: MalleableApp, params: MalleabilityParams,
-                 rms: RMSClient, devices: Optional[List] = None,
+                 rms: Optional[RMSClient] = None,
+                 devices: Optional[List] = None,
                  redistribute: Optional[Callable] = None,
-                 max_model_axis: int = 16):
+                 max_model_axis: int = 16,
+                 policy=None,
+                 cluster_view: Optional[Callable[[], ClusterView]] = None):
         self.app = app
         self.params = params
-        self.rms = rms
         self.devices = list(devices) if devices is not None else jax.devices()
         assert len(self.devices) >= params.max_procs, (
             f"need {params.max_procs} workers, have {len(self.devices)}")
@@ -71,6 +73,18 @@ class MalleableRunner:
             lambda state, shardings: redistribute_state(state, shardings))
         self.max_model_axis = max_model_axis
         self.current = params.preferred
+        if rms is None:
+            # policy selection: run a named/custom Policy locally against a
+            # cluster view (default: this runner owns every local device and
+            # there is no queue — the single-tenant standalone case).
+            view = cluster_view or (lambda: ClusterView(
+                available=len(self.devices) - self.current,
+                pending_min_sizes=[]))
+            rms = PolicyRMS(view, policy=get_policy(policy))
+        elif policy is not None or cluster_view is not None:
+            raise ValueError(
+                "pass either rms= or policy=/cluster_view=, not both")
+        self.rms = rms
         self.mesh = self._mesh_for(self.current)
         self._step_cache: Dict[int, Callable] = {}
         self.events: List[ResizeEvent] = []

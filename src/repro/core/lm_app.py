@@ -36,7 +36,6 @@ class LMTrainApp:
         self.dataset = SyntheticDataset(cfg, shape, seed=seed,
                                         global_batch=global_batch)
         self.rules = rules_for(cfg)
-        self._train_step = make_train_step(cfg, self.optimizer)
 
     # -- MalleableApp protocol -----------------------------------------
     def state_shardings(self, mesh):
@@ -55,7 +54,10 @@ class LMTrainApp:
         ds = self.dataset
         example = ds.batch_at(0)
         bs = batch_shardings(self.cfg, self.shape, mesh, example)
-        step_impl = self._train_step
+        # one closure per mesh: JAX's trace cache keys on function identity
+        # and global avals (identical across meshes), so a shared train_step
+        # would replay the first mesh's baked-in sharding constraints
+        step_impl = make_train_step(self.cfg, self.optimizer)
         rules = self.rules
         jitted = jax.jit(step_impl, in_shardings=(ss, bs),
                          out_shardings=(ss, None), donate_argnums=(0,))

@@ -1,9 +1,12 @@
-"""Algorithm 2 — the system-aware resize policy (paper §5.1), verbatim.
+"""Malleability policies — Algorithm 2 (paper §5.1) plus a pluggable framework.
 
-The policy sees a *cluster view* (available workers, pending queue) and a
-*job view* (current / preferred / limits) and returns one of
-{expand, shrink, none}. It is deliberately identical in structure to the
-paper's pseudo-code so the workload studies reproduce its decisions:
+The module has two layers:
+
+* ``decide`` — the paper's Algorithm-2 resize policy, verbatim.  A policy
+  sees a *cluster view* (available workers, pending queue) and a *job view*
+  (current / preferred / limits) and returns one of {expand, shrink, none}.
+  It is deliberately identical in structure to the paper's pseudo-code so
+  the workload studies reproduce its decisions:
 
     1: if current < preferred then
     2:     if avail_resources then return expand
@@ -15,11 +18,21 @@ paper's pseudo-code so the workload studies reproduce its decisions:
     8:             if avail_resources then return expand
     9:     else
    10:         if avail_resources then return expand
+
+* ``Policy`` — the protocol the discrete-event scheduler (rms/scheduler.py)
+  and the runner-side ``PolicyRMS`` program against.  A policy owns three
+  decisions: how to *order the pending queue* (``priority_key``), whether to
+  *backfill* past a blocked queue head (``backfill``), and when a running
+  malleable job should *grow or shrink* (``decide``).  Three built-ins ship
+  with the repo (see ``POLICIES``): the paper's age-based multifactor
+  Algorithm 2, an energy-aware shrink-first policy built on the Appendix-B
+  idle/loaded wattage model, and a throughput-greedy SJF/backfill-aggressive
+  policy.  ``docs/policies.md`` documents the framework.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Callable, Optional, Protocol, Sequence, Tuple, Union
 
 from repro.core.params import (MalleabilityParams, expansion_target,
                                shrink_target)
@@ -92,3 +105,184 @@ def decide(current: int, params: MalleabilityParams,
     # line 10: idle resources, empty queue -> grow toward the upper limit
     act = try_expand()
     return act or Action.none(current)
+
+
+# ======================================================================
+# Pluggable policy framework
+# ======================================================================
+
+class Policy(Protocol):
+    """What the scheduler / PolicyRMS need from a malleability policy.
+
+    ``job`` arguments are duck-typed: any object exposing the simulator's
+    ``Job`` surface (``submit_time``, ``boosted``, ``remaining_work`` and an
+    ``app`` with ``exec_time(p)`` / ``params``).  Runner-side callers that
+    have no Job pass ``job=None`` and policies must degrade gracefully.
+    """
+
+    name: str
+    backfill: bool                    # scan past a blocked queue head?
+
+    def configure(self, cfg) -> None:
+        """Bind cluster constants (node count, wattage) from a SimConfig-like
+        object before a run.  Must be idempotent."""
+        ...
+
+    def priority_key(self, job, now: float) -> Tuple:
+        """Sort key for the pending queue (smaller = scheduled first)."""
+        ...
+
+    def decide(self, current: int, params: MalleabilityParams,
+               cluster: ClusterView, job=None) -> Action:
+        """Grow/shrink decision for one running malleable job."""
+        ...
+
+
+class BasePolicy:
+    """Default behaviors shared by the built-ins: age-based multifactor
+    priority (post-shrink beneficiaries first, then FCFS age) and backfill
+    enabled, matching the paper's sched/backfill Slurm setup."""
+
+    name = "base"
+    backfill = True
+
+    def configure(self, cfg) -> None:        # pragma: no cover - trivial
+        pass
+
+    def priority_key(self, job, now: float) -> Tuple:
+        return (not getattr(job, "boosted", False), job.submit_time)
+
+    def decide(self, current: int, params: MalleabilityParams,
+               cluster: ClusterView, job=None) -> Action:
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"{type(self).__name__}(name={self.name!r})"
+
+
+class Algorithm2Policy(BasePolicy):
+    """The paper's §5.1 policy: age-based multifactor priority + the
+    Algorithm-2 expand/shrink rules (never shrinks below preferred)."""
+
+    name = "algorithm2"
+
+    def decide(self, current: int, params: MalleabilityParams,
+               cluster: ClusterView, job=None) -> Action:
+        return decide(current, params, cluster)
+
+
+class EnergyAwarePolicy(BasePolicy):
+    """Energy-aware shrink-first policy (Appendix-B wattage model).
+
+    Each legal size ``p`` is scored by the job's incremental energy to
+    completion::
+
+        E(p) = t(p) * [ p * (loaded_w - idle_w)  (+ nodes * idle_w if the
+                        queue is empty, i.e. the job drives the makespan) ]
+
+    With pending jobs the idle term is dropped (freed nodes are immediately
+    re-allocated, not idled), which pushes the optimum toward ``min_procs``:
+    the policy sheds workers eagerly — below *preferred*, unlike Algorithm 2
+    — releasing them both to the queue and to the power budget.  On an idle
+    cluster the ``nodes * idle_w`` makespan term rewards finishing sooner,
+    so well-scaling apps grow while poorly-scaling ones (n-body) hold small.
+    """
+
+    name = "energy"
+
+    def __init__(self, idle_w: float = 100.0, loaded_w: float = 340.0,
+                 nodes: int = 128,
+                 cost_fn: Optional[Callable[[int], float]] = None):
+        self.idle_w = idle_w
+        self.loaded_w = loaded_w
+        self.nodes = nodes
+        self.cost_fn = cost_fn           # runner-side fallback, see _exec_time
+
+    def configure(self, cfg) -> None:
+        self.idle_w = getattr(cfg, "idle_w", self.idle_w)
+        self.loaded_w = getattr(cfg, "loaded_w", self.loaded_w)
+        self.nodes = getattr(cfg, "nodes", self.nodes)
+
+    def _exec_time(self, p: int, job) -> float:
+        if job is not None:
+            return job.app.exec_time(p)
+        if self.cost_fn is not None:
+            return self.cost_fn(p)
+        return 1.0 / p ** 0.5            # generic sublinear-scaling proxy
+
+    def job_energy(self, p: int, job, queue_empty: bool) -> float:
+        watts = p * (self.loaded_w - self.idle_w)
+        if queue_empty:
+            watts += self.nodes * self.idle_w
+        return self._exec_time(p, job) * watts
+
+    def decide(self, current: int, params: MalleabilityParams,
+               cluster: ClusterView, job=None) -> Action:
+        queue_empty = not cluster.pending_min_sizes
+        best = min(params.legal_sizes(),
+                   key=lambda p: self.job_energy(p, job, queue_empty))
+        if best > current:
+            tgt = min(best, expansion_target(current, params,
+                                             cluster.available))
+            if tgt > current:
+                return Action("expand", tgt)
+        elif best < current:
+            return Action("shrink", best)
+        return Action.none(current)
+
+
+class ThroughputGreedyPolicy(BasePolicy):
+    """Throughput-greedy: SJF queue ordering + backfill-aggressive resizes.
+
+    Pending queue is ordered by estimated remaining service time at the
+    preferred size (shortest-job-first maximizes completed jobs/s).  Running
+    jobs shrink as deep as ``min_procs`` — not just to preferred — whenever
+    the release would let the cheapest pending job start; with an empty
+    queue they grab every idle worker up to ``max_procs``.
+    """
+
+    name = "throughput"
+
+    def priority_key(self, job, now: float) -> Tuple:
+        service = job.app.exec_time(job.app.params.preferred) \
+            * getattr(job, "remaining_work", 1.0)
+        return (not getattr(job, "boosted", False), service, job.submit_time)
+
+    def decide(self, current: int, params: MalleabilityParams,
+               cluster: ClusterView, job=None) -> Action:
+        if cluster.pending_min_sizes:
+            need = min(cluster.pending_min_sizes)
+            # largest shrink target whose release unblocks the cheapest
+            # pending job — least self-harm that still serves the queue
+            for tgt in sorted((s for s in params.legal_sizes()
+                               if s < current), reverse=True):
+                if current - tgt + cluster.available >= need:
+                    return Action("shrink", tgt)
+            return Action.none(current)
+        tgt = expansion_target(current, params, cluster.available)
+        if tgt > current:
+            return Action("expand", tgt)
+        return Action.none(current)
+
+
+POLICIES = {
+    Algorithm2Policy.name: Algorithm2Policy,
+    EnergyAwarePolicy.name: EnergyAwarePolicy,
+    ThroughputGreedyPolicy.name: ThroughputGreedyPolicy,
+    # common aliases used by benchmarks / CLI flags
+    "energy-aware": EnergyAwarePolicy,
+    "throughput-greedy": ThroughputGreedyPolicy,
+}
+
+
+def get_policy(policy: Union[str, Policy, None]) -> Policy:
+    """Resolve a policy name / instance / None (-> Algorithm 2)."""
+    if policy is None:
+        return Algorithm2Policy()
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]()
+        except KeyError:
+            raise KeyError(
+                f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
+    return policy

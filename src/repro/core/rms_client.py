@@ -2,7 +2,8 @@
 
 Implementations:
   * ScriptedRMS  — deterministic action schedule (tests, examples).
-  * PolicyRMS    — evaluates Algorithm 2 against a live ClusterView provider.
+  * PolicyRMS    — evaluates a pluggable Policy (Algorithm 2 by default)
+                   against a live ClusterView provider.
   * FileRMS      — watches a JSON file for operator-issued resize commands
                    (the single-host stand-in for the Slurm RPC socket; used by
                    the elastic training demo).
@@ -15,7 +16,7 @@ import os
 from typing import Callable, Dict, Optional, Protocol
 
 from repro.core.params import MalleabilityParams
-from repro.core.policy import Action, ClusterView, decide
+from repro.core.policy import Action, ClusterView, Policy, get_policy
 
 
 class RMSClient(Protocol):
@@ -39,14 +40,18 @@ class ScriptedRMS:
 
 
 class PolicyRMS:
-    """Algorithm 2 against a caller-supplied cluster view."""
+    """A malleability policy against a caller-supplied cluster view.
 
-    def __init__(self, view_fn: Callable[[], ClusterView]):
+    ``policy`` is any ``repro.core.policy.Policy`` instance or registry name
+    ("algorithm2" — the default — "energy", "throughput", ...)."""
+
+    def __init__(self, view_fn: Callable[[], ClusterView], policy=None):
         self.view_fn = view_fn
+        self.policy: Policy = get_policy(policy)
 
     def query(self, *, step: int, current: int,
               params: MalleabilityParams) -> Action:
-        return decide(current, params, self.view_fn())
+        return self.policy.decide(current, params, self.view_fn())
 
 
 class FileRMS:

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.models.params import ParamDef
 from repro.models.layers import apply_rope, rmsnorm
+from repro.parallel.compat import shard_map
 
 NEG_INF = -1e30
 
@@ -265,8 +266,8 @@ def _attn_apply_seq_shardmap(params, x, cfg: ArchConfig, mesh, rules, *,
                 chunk_k=cfg.attn_chunk_k, q_offset=offset)
             return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
 
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=x_spec, check_vma=False)(
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=x_spec, check_vma=False)(
         *[params[n] for n in names], x)
 
 

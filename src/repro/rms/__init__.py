@@ -1,5 +1,16 @@
-from repro.rms.scheduler import SimConfig, SimResult, Simulator, Timeline
-from repro.rms.workload import APPS, AppProfile, Job, feitelson_arrivals, make_workload
+from repro.core.policy import (POLICIES, Algorithm2Policy, BasePolicy,
+                               EnergyAwarePolicy, Policy,
+                               ThroughputGreedyPolicy, get_policy)
+from repro.rms.scheduler import (ResizeRecord, SimConfig, SimResult,
+                                 Simulator, Timeline)
+from repro.rms.workload import (APPS, MOLDABLE, RIGID, SCENARIOS,
+                                SUBMISSION_MODES, AppProfile, Job,
+                                bursty_arrivals, feitelson_arrivals,
+                                make_scenario, make_workload)
 
-__all__ = ["SimConfig", "SimResult", "Simulator", "Timeline", "APPS",
-           "AppProfile", "Job", "feitelson_arrivals", "make_workload"]
+__all__ = ["SimConfig", "SimResult", "Simulator", "Timeline", "ResizeRecord",
+           "APPS", "AppProfile", "Job", "feitelson_arrivals", "make_workload",
+           "RIGID", "MOLDABLE", "SUBMISSION_MODES", "SCENARIOS",
+           "bursty_arrivals", "make_scenario",
+           "Policy", "BasePolicy", "Algorithm2Policy", "EnergyAwarePolicy",
+           "ThroughputGreedyPolicy", "POLICIES", "get_policy"]

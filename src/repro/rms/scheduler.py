@@ -2,9 +2,16 @@
 
 Models the paper's §5 testbed: 128 compute nodes (1 controller excluded),
 sched/backfill with a 10-second interval, age-based multifactor priority
-without walltime requests, whole-node select/linear allocation, and the
-Algorithm-2 malleability policy evaluated at scheduler ticks for every
-running malleable job (honoring per-app inhibitor periods).
+without walltime requests, whole-node select/linear allocation, and a
+malleability policy evaluated at scheduler ticks for every running
+malleable job (honoring per-app inhibitor periods).
+
+The scheduling engine is policy-driven: ``Simulator(jobs, cfg, policy=...)``
+accepts any ``repro.core.policy.Policy`` (or registry name).  The policy
+owns queue ordering (``priority_key``), backfill behavior (``backfill``),
+and the grow/shrink decision (``decide``); the engine owns event handling,
+resource accounting and the §3.2 inhibitor periods.  Default policy is the
+paper's Algorithm 2.
 
 Resize overhead is charged per the paper's §3.2 findings: dominated by the
 data size over the interconnect bandwidth, plus a spawn term growing with the
@@ -14,11 +21,11 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.policy import ClusterView, decide
+from repro.core.policy import ClusterView, Policy, get_policy
 from repro.rms.workload import Job
 
 
@@ -47,6 +54,16 @@ class Timeline:
     completed: List[int] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass(frozen=True)
+class ResizeRecord:
+    """One policy-driven resize, for audit/invariant checks."""
+    t: float
+    jid: int
+    kind: str                              # "expand" | "shrink"
+    from_procs: int
+    to_procs: int
+
+
 @dataclasses.dataclass
 class SimResult:
     jobs: List[Job]
@@ -58,6 +75,7 @@ class SimResult:
     timeline: Timeline
     n_stragglers: int = 0
     n_straggler_mitigations: int = 0
+    resize_log: List[ResizeRecord] = dataclasses.field(default_factory=list)
 
     def mean(self, fn) -> float:
         return float(np.mean([fn(j) for j in self.jobs]))
@@ -76,8 +94,11 @@ class SimResult:
 
 
 class Simulator:
-    def __init__(self, jobs: List[Job], config: Optional[SimConfig] = None):
+    def __init__(self, jobs: List[Job], config: Optional[SimConfig] = None,
+                 policy: Union[str, Policy, None] = None):
         self.cfg = config or SimConfig()
+        self.policy = get_policy(policy)
+        self.policy.configure(self.cfg)
         self.jobs = sorted(jobs, key=lambda j: j.submit_time)
         for j in self.jobs:                     # reset runtime state
             j.start_time = j.end_time = -1.0
@@ -110,6 +131,7 @@ class Simulator:
         n_mitigations = 0
         strag_rng = np.random.default_rng(cfg.straggler_seed)
         timeline = Timeline()
+        resize_log: List[ResizeRecord] = []
 
         def _rate(j: Job) -> float:
             r = j.rate(j.nprocs)
@@ -147,20 +169,26 @@ class Simulator:
 
         def try_schedule():
             nonlocal free
+            # queue order is policy-owned; default (Algorithm 2) is the
             # multifactor: boosted (post-shrink beneficiaries) first, then age
-            order = sorted(pending, key=lambda j: (not j.boosted,
-                                                   j.submit_time))
+            order = sorted(pending,
+                           key=lambda j: self.policy.priority_key(j, now))
             for j in order:
                 lo, hi = j.request()
                 if j.moldable:
                     if free >= lo:
                         start_job(j, min(free, hi))
                         pending.remove(j)
+                        continue
                 else:
                     if free >= hi:
                         start_job(j, hi)
                         pending.remove(j)
-                # else: backfill semantics — keep scanning later jobs
+                        continue
+                # blocked: backfill policies keep scanning later jobs,
+                # strict-FCFS policies stop at the queue head
+                if not self.policy.backfill:
+                    break
 
         def straggler_pass():
             nonlocal n_stragglers, n_mitigations, free
@@ -202,25 +230,32 @@ class Simulator:
                     available=free,
                     pending_min_sizes=[p.request()[0] for p in pending],
                     reclaimable_others=reclaimable)
-                act = decide(j.nprocs, j.app.params, view)
+                act = self.policy.decide(j.nprocs, j.app.params, view, job=j)
                 if act.kind == "none" or act.target == j.nprocs:
                     continue
-                # settle progress before the resize
-                ovh = self._resize_overhead(j, act.target)
+                # engine-side safety: never outside [min, max] regardless of
+                # what the policy asked for
+                target = j.app.params.clamp(act.target)
+                if target == j.nprocs:
+                    continue
+                ovh = self._resize_overhead(j, target)
                 if act.kind == "expand":
-                    grab = act.target - j.nprocs
+                    grab = target - j.nprocs
                     if grab > free:
                         continue
                     free -= grab
                 else:
-                    released = j.nprocs - act.target
+                    released = j.nprocs - target
                     free += released
                     # paper: the enabled pending job gets the highest priority
                     for p in sorted(pending, key=lambda x: x.submit_time):
                         if p.request()[0] <= free:
                             p.boosted = True
                             break
-                j.nprocs = act.target
+                resize_log.append(ResizeRecord(
+                    t=now, jid=j.jid, kind=act.kind,
+                    from_procs=j.nprocs, to_procs=target))
+                j.nprocs = target
                 j.last_update = now + ovh
                 j.next_reconfig_ok = now + max(
                     j.app.params.sched_period_s,
@@ -279,4 +314,5 @@ class Simulator:
                          n_resizes=n_resizes,
                          resize_overhead_s=resize_overhead,
                          timeline=timeline, n_stragglers=n_stragglers,
-                         n_straggler_mitigations=n_mitigations)
+                         n_straggler_mitigations=n_mitigations,
+                         resize_log=resize_log)

@@ -1,8 +1,19 @@
-"""Workload model: application profiles, job classes, Feitelson arrivals.
+"""Workload model: application profiles, job classes, arrivals, scenarios.
 
 Reproduces the paper's §5.2-5.4 setup: four applications with distinct
 scalability personalities (Table 4/5), two submission modes (Table 6), four
 job classes (Table 3), and factor-1 Feitelson (Poisson) inter-arrival times.
+
+Submission modes (§4 / Table 6) are first-class: pass ``mode="rigid"`` or
+``mode="moldable"`` to ``make_workload`` (the legacy ``moldable=`` bool is
+still accepted).  Rigid jobs request exactly their upper worker limit;
+moldable jobs request a ``[min, max]`` range and start with whatever the
+scheduler can give.
+
+Beyond the paper, ``SCENARIOS`` is a library of named cluster scenarios
+(bursty arrivals, bimodal job sizes, straggler-heavy, energy-capped) —
+each returns ``(jobs, simconfig_overrides)`` so any scheduling policy can
+be evaluated against it with one call (see ``benchmarks/scenario_suite.py``).
 
 Execution-time models are Amdahl-type ``t(p) = t1*((1-f) + f/p) + c*(p-1)``
 calibrated so the 10%-threshold *gain difference* heuristic (§5.3, Fig. 3)
@@ -13,11 +24,16 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.params import MalleabilityParams
+
+#: The paper's two job submission modes (§4, Table 6).
+RIGID = "rigid"
+MOLDABLE = "moldable"
+SUBMISSION_MODES = (RIGID, MOLDABLE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,29 +151,142 @@ def feitelson_arrivals(n_jobs: int, rng: np.random.Generator,
     return np.cumsum(gaps)
 
 
-def make_workload(n_jobs: int, *, moldable: bool, malleable, seed: int = 0,
+def resolve_mode(mode: Optional[str], moldable: Optional[bool]) -> bool:
+    """Resolve (mode, legacy-moldable-bool) to the moldable flag."""
+    if mode is not None:
+        if mode not in SUBMISSION_MODES:
+            raise ValueError(
+                f"unknown submission mode {mode!r}; known: {SUBMISSION_MODES}")
+        if moldable is not None and bool(moldable) != (mode == MOLDABLE):
+            raise ValueError(
+                f"mode={mode!r} contradicts moldable={moldable!r}")
+        return mode == MOLDABLE
+    if moldable is None:
+        raise TypeError("make_workload: pass mode='rigid'|'moldable' "
+                        "(or the legacy moldable= bool)")
+    return bool(moldable)
+
+
+def make_workload(n_jobs: int, *, moldable: Optional[bool] = None,
+                  malleable=True, mode: Optional[str] = None, seed: int = 0,
                   app_names: Optional[List[str]] = None,
                   malleable_fraction: float = 1.0,
-                  malleable_only_app: Optional[str] = None) -> List[Job]:
+                  malleable_only_app: Optional[str] = None,
+                  arrivals: Optional[np.ndarray] = None,
+                  app_pool: Optional[Sequence[AppProfile]] = None) -> List[Job]:
     """Random mixed workload (§5.4 / §5.6).
 
-    ``malleable`` may be a bool (all jobs) and is refined by
-    ``malleable_fraction`` (Table 7 percentages) or ``malleable_only_app``
-    (Table 7 per-app columns).
+    ``mode`` is the submission mode (``"rigid"`` / ``"moldable"``, Table 6);
+    the legacy ``moldable=`` bool is equivalent.  ``malleable`` may be a bool
+    (all jobs) and is refined by ``malleable_fraction`` (Table 7 percentages)
+    or ``malleable_only_app`` (Table 7 per-app columns).  ``arrivals`` and
+    ``app_pool`` override the Feitelson arrival process and the Table-4 app
+    mix — the hooks the scenario library builds on (duplicate an entry in
+    ``app_pool`` to weight it).
     """
+    is_moldable = resolve_mode(mode, moldable)
     rng = np.random.default_rng(seed)
-    names = app_names or list(APPS)
-    arrivals = feitelson_arrivals(n_jobs, rng)
-    picks = rng.integers(0, len(names), size=n_jobs)
+    pool = list(app_pool) if app_pool is not None else \
+        [APPS[n] for n in (app_names or list(APPS))]
+    if arrivals is None:
+        arrivals = feitelson_arrivals(n_jobs, rng)
+    picks = rng.integers(0, len(pool), size=n_jobs)
     mall_draw = rng.random(n_jobs)
     jobs = []
     for i in range(n_jobs):
-        app = APPS[names[picks[i]]]
+        app = pool[picks[i]]
         m = bool(malleable)
         if m and malleable_fraction < 1.0:
             m = mall_draw[i] < malleable_fraction
         if malleable_only_app is not None:
             m = app.name == malleable_only_app
         jobs.append(Job(jid=i, app=app, submit_time=float(arrivals[i]),
-                        moldable=moldable, malleable=m))
+                        moldable=is_moldable, malleable=m))
     return jobs
+
+
+# ======================================================================
+# Scenario library (beyond-paper): named cluster situations, policy-agnostic
+# ======================================================================
+
+def bursty_arrivals(n_jobs: int, rng: np.random.Generator,
+                    burst_size: int = 25, intra_gap_s: float = 2.0,
+                    inter_burst_gap_s: float = 1800.0) -> np.ndarray:
+    """Arrivals in tight bursts separated by long quiet windows — the
+    campaign-submission pattern that stresses shrink-to-admit policies."""
+    gaps = rng.exponential(intra_gap_s, size=n_jobs)
+    gaps[::burst_size] += rng.exponential(inter_burst_gap_s,
+                                          size=len(gaps[::burst_size]))
+    gaps[0] = 0.0
+    return np.cumsum(gaps)
+
+
+def _scaled_app(app: AppProfile, suffix: str, t1_scale: float,
+                max_procs: int) -> AppProfile:
+    """Derive a size variant of an app (bimodal scenarios), keeping the
+    malleability parameters legal."""
+    p = app.params
+    hi = min(p.max_procs, max_procs)
+    lo = min(p.min_procs, hi)
+    pref = min(max(p.preferred, lo), hi)
+    return dataclasses.replace(
+        app, name=f"{app.name}-{suffix}", t1=app.t1 * t1_scale,
+        params=MalleabilityParams(lo, hi, pref, p.sched_period_s,
+                                  p.sched_iterations))
+
+
+def _steady(n_jobs, mode, malleable, seed):
+    return make_workload(n_jobs, mode=mode, malleable=malleable,
+                         seed=seed), {}
+
+
+def _bursty(n_jobs, mode, malleable, seed):
+    rng = np.random.default_rng(seed)
+    arr = bursty_arrivals(n_jobs, rng)
+    return make_workload(n_jobs, mode=mode, malleable=malleable, seed=seed,
+                         arrivals=arr), {}
+
+
+def _bimodal(n_jobs, mode, malleable, seed):
+    # 70% short/narrow jobs, 30% long/wide jobs (duplicate entries = weights)
+    small = [_scaled_app(a, "small", 0.25, 8) for a in APPS.values()]
+    large = [_scaled_app(a, "large", 3.0, 32) for a in APPS.values()]
+    pool = small * 7 + large * 3
+    return make_workload(n_jobs, mode=mode, malleable=malleable, seed=seed,
+                         app_pool=pool), {}
+
+
+def _straggler_heavy(n_jobs, mode, malleable, seed):
+    jobs = make_workload(n_jobs, mode=mode, malleable=malleable, seed=seed)
+    return jobs, {"straggler_mtbf_s": 4000.0, "straggler_seed": seed}
+
+
+def _energy_capped(n_jobs, mode, malleable, seed):
+    # power cap: half the fleet is switched off -> 64 usable nodes
+    jobs = make_workload(n_jobs, mode=mode, malleable=malleable, seed=seed)
+    return jobs, {"nodes": 64}
+
+
+#: name -> fn(n_jobs, mode, malleable, seed) -> (jobs, simconfig_overrides)
+SCENARIOS: Dict[str, Callable] = {
+    "steady": _steady,
+    "bursty": _bursty,
+    "bimodal": _bimodal,
+    "straggler-heavy": _straggler_heavy,
+    "energy-capped": _energy_capped,
+}
+
+
+def make_scenario(name: str, n_jobs: int = 120, *, mode: str = MOLDABLE,
+                  malleable: bool = True,
+                  seed: int = 0) -> Tuple[List[Job], Dict]:
+    """Instantiate a named scenario.
+
+    Returns ``(jobs, overrides)`` where ``overrides`` are keyword arguments
+    for ``SimConfig`` (kept as a plain dict so the workload layer stays
+    import-independent from the scheduler)."""
+    try:
+        fn = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+    return fn(n_jobs, mode, malleable, seed)

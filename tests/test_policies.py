@@ -1,0 +1,188 @@
+"""Pluggable-policy framework: per-policy invariants, submission modes,
+scenario library, and the rigid-vs-moldable throughput regression."""
+import pytest
+
+from repro.core import (Action, Algorithm2Policy, ClusterView,
+                        EnergyAwarePolicy, MalleabilityParams, POLICIES,
+                        ThroughputGreedyPolicy, decide, get_policy)
+from repro.rms import (MOLDABLE, RIGID, SCENARIOS, SimConfig, Simulator,
+                       make_scenario, make_workload)
+
+POLICY_NAMES = ("algorithm2", "energy", "throughput")
+
+
+def _sim(n=60, mode=MOLDABLE, malleable=True, policy=None, seed=42, **cfg):
+    jobs = make_workload(n, mode=mode, malleable=malleable, seed=seed)
+    return Simulator(jobs, SimConfig(**cfg), policy=policy).run()
+
+
+# -- registry ----------------------------------------------------------
+
+def test_registry_and_aliases():
+    assert isinstance(get_policy(None), Algorithm2Policy)
+    assert isinstance(get_policy("energy-aware"), EnergyAwarePolicy)
+    assert isinstance(get_policy("throughput-greedy"), ThroughputGreedyPolicy)
+    inst = EnergyAwarePolicy()
+    assert get_policy(inst) is inst
+    with pytest.raises(KeyError):
+        get_policy("no-such-policy")
+
+
+def test_algorithm2_policy_matches_decide_function():
+    pol = Algorithm2Policy()
+    for cur in (4, 16, 32):
+        for view in (ClusterView(28, []), ClusterView(0, [12]),
+                     ClusterView(16, [64])):
+            a, b = pol.decide(cur, MalleabilityParams(2, 32, 16), view), \
+                decide(cur, MalleabilityParams(2, 32, 16), view)
+            assert (a.kind, a.target) == (b.kind, b.target)
+
+
+# -- per-policy engine invariants --------------------------------------
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_policy_invariants(policy):
+    res = _sim(policy=policy)
+    # every job completes, causally ordered
+    assert all(j.end_time >= j.start_time >= j.submit_time >= 0
+               for j in res.jobs)
+    # never allocates beyond the cluster
+    assert max(res.timeline.allocated) <= SimConfig().nodes
+    assert 0 < res.alloc_rate <= 1.0
+    # resize targets stay within each job's [min, max]
+    by_id = {j.jid: j for j in res.jobs}
+    for r in res.resize_log:
+        p = by_id[r.jid].app.params
+        assert p.min_procs <= r.to_procs <= p.max_procs
+        assert (r.kind == "expand") == (r.to_procs > r.from_procs)
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_inhibitor_periods_honored(policy):
+    """§3.2: consecutive resizes of one job are spaced by at least its
+    sched_period_s (the engine enforces this for every policy)."""
+    res = _sim(policy=policy)
+    assert res.n_resizes == len(res.resize_log) > 0
+    last = {}
+    by_id = {j.jid: j for j in res.jobs}
+    for r in res.resize_log:
+        if r.jid in last:
+            gap = r.t - last[r.jid]
+            assert gap + 1e-6 >= by_id[r.jid].app.params.sched_period_s
+        last[r.jid] = r.t
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_rigid_nonmalleable_jobs_never_resized(policy):
+    res = _sim(mode=RIGID, malleable=False, policy=policy)
+    assert res.n_resizes == 0 and not res.resize_log
+    for j in res.jobs:          # rigid jobs run at exactly their request
+        assert j.nprocs == j.app.params.max_procs
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+def test_policy_determinism(policy):
+    assert _sim(policy=policy).summary() == _sim(policy=policy).summary()
+
+
+# -- submission modes --------------------------------------------------
+
+def test_mode_equivalent_to_legacy_bool():
+    a = [((j.moldable, j.submit_time)) for j in
+         make_workload(30, mode=MOLDABLE, malleable=True, seed=3)]
+    b = [((j.moldable, j.submit_time)) for j in
+         make_workload(30, moldable=True, malleable=True, seed=3)]
+    assert a == b
+
+
+def test_mode_validation():
+    with pytest.raises(ValueError):
+        make_workload(5, mode="elastic", malleable=True)
+    with pytest.raises(TypeError):
+        make_workload(5, malleable=True)    # neither mode nor moldable
+    with pytest.raises(ValueError):         # contradictory mode vs legacy flag
+        make_workload(5, mode=RIGID, moldable=True, malleable=True)
+
+
+def test_rigid_vs_moldable_throughput_regression():
+    """The headline: malleable/moldable beats the rigid static baseline on
+    completed-jobs/s — for every built-in policy (paper: >3x best-case)."""
+    static = _sim(mode=RIGID, malleable=False).summary()["throughput_jps"]
+    for policy in POLICY_NAMES:
+        mold = _sim(mode=MOLDABLE, policy=policy).summary()["throughput_jps"]
+        rig = _sim(mode=RIGID, policy=policy).summary()["throughput_jps"]
+        assert mold > static, policy
+        assert rig > static, policy
+        assert mold >= 0.9 * rig, policy    # moldable never collapses
+    alg2 = _sim(mode=MOLDABLE, policy="algorithm2").summary()
+    assert alg2["throughput_jps"] > 2.0 * static
+
+
+def test_energy_policy_saves_energy():
+    alg2 = _sim(policy="algorithm2").summary()["energy_kwh"]
+    energy = _sim(policy="energy").summary()["energy_kwh"]
+    assert energy < alg2
+
+
+# -- policy unit behavior ----------------------------------------------
+
+def test_energy_policy_sheds_below_preferred_under_load():
+    pol = EnergyAwarePolicy(idle_w=100.0, loaded_w=340.0, nodes=128)
+    app = _cg()
+    act = pol.decide(16, app.params, ClusterView(0, [12]), job=_FakeJob(app))
+    assert act.kind == "shrink" and act.target < app.params.preferred
+
+
+def test_energy_policy_grows_scalable_app_on_idle_cluster():
+    pol = EnergyAwarePolicy(idle_w=100.0, loaded_w=340.0, nodes=128)
+    app = _cg()
+    act = pol.decide(4, app.params, ClusterView(124, []), job=_FakeJob(app))
+    assert act.kind == "expand" and act.target > 4
+
+
+def test_throughput_policy_sjf_priority():
+    from repro.rms import APPS
+    pol = ThroughputGreedyPolicy()
+    short = _FakeJob(APPS["nbody"], submit_time=100.0)   # later but shorter
+    long_ = _FakeJob(APPS["cg"], submit_time=0.0)
+    order = sorted([long_, short], key=lambda j: pol.priority_key(j, 0.0))
+    assert order[0] is short
+
+
+def test_throughput_policy_shrinks_to_unblock():
+    pol = ThroughputGreedyPolicy()
+    app = _cg()
+    act = pol.decide(32, app.params, ClusterView(0, [2]), job=_FakeJob(app))
+    assert act.kind == "shrink"
+    assert 32 - act.target >= 2
+
+
+# -- scenario library --------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenarios_run_to_completion(name):
+    jobs, overrides = make_scenario(name, 30, seed=1)
+    res = Simulator(jobs, SimConfig(record_timeline=False, **overrides),
+                    policy="algorithm2").run()
+    assert all(j.end_time >= 0 for j in res.jobs)
+    assert res.makespan > 0
+
+
+def test_unknown_scenario():
+    with pytest.raises(KeyError):
+        make_scenario("no-such-scenario")
+
+
+# -- helpers -----------------------------------------------------------
+
+class _FakeJob:
+    def __init__(self, app, submit_time=0.0):
+        self.app = app
+        self.submit_time = submit_time
+        self.boosted = False
+        self.remaining_work = 1.0
+
+
+def _cg():
+    from repro.rms import APPS
+    return APPS["cg"]

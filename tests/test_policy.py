@@ -1,5 +1,9 @@
 """Algorithm 2 branch coverage + malleability-parameter invariants."""
-from hypothesis import given, settings, strategies as st
+try:                                   # property-based dep is optional —
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # branch tests below still run bare
+    HAVE_HYPOTHESIS = False
 
 from repro.core import (Action, ClusterView, MalleabilityParams, decide,
                         expansion_target, shrink_target)
@@ -58,34 +62,34 @@ def test_line10_expand_when_idle():
     assert a.kind == "expand" and a.target == 32
 
 
-# -- invariants (property-based) ----------------------------------------
+# -- invariants (property-based; need hypothesis) -----------------------
 
-params_st = st.tuples(st.sampled_from([1, 2, 4]), st.sampled_from([8, 16, 32]),
-                      st.sampled_from([4, 8])).map(
-    lambda t: MalleabilityParams(t[0], t[1], max(t[0], min(t[2], t[1]))))
+if HAVE_HYPOTHESIS:
+    params_st = st.tuples(st.sampled_from([1, 2, 4]),
+                          st.sampled_from([8, 16, 32]),
+                          st.sampled_from([4, 8])).map(
+        lambda t: MalleabilityParams(t[0], t[1], max(t[0], min(t[2], t[1]))))
 
+    @settings(max_examples=200, deadline=None)
+    @given(params=params_st, current=st.sampled_from([1, 2, 4, 8, 16, 32]),
+           avail=st.integers(0, 64), pending=st.lists(st.integers(1, 64),
+                                                      max_size=3))
+    def test_decide_invariants(params, current, avail, pending):
+        current = params.clamp(current)
+        a = decide(current, params, ClusterView(avail, pending))
+        assert a.kind in ("expand", "shrink", "none")
+        if a.kind == "expand":
+            assert current < a.target <= params.max_procs
+            assert a.target - current <= avail
+        if a.kind == "shrink":
+            assert params.preferred <= a.target < current
+            assert pending                  # shrink only serves the queue
 
-@settings(max_examples=200, deadline=None)
-@given(params=params_st, current=st.sampled_from([1, 2, 4, 8, 16, 32]),
-       avail=st.integers(0, 64), pending=st.lists(st.integers(1, 64),
-                                                  max_size=3))
-def test_decide_invariants(params, current, avail, pending):
-    current = params.clamp(current)
-    a = decide(current, params, ClusterView(avail, pending))
-    assert a.kind in ("expand", "shrink", "none")
-    if a.kind == "expand":
-        assert current < a.target <= params.max_procs
-        assert a.target - current <= avail
-    if a.kind == "shrink":
-        assert params.preferred <= a.target < current
-        assert pending                      # shrink only serves the queue
-
-
-@settings(max_examples=100, deadline=None)
-@given(params=params_st, avail=st.integers(0, 64))
-def test_targets_legal(params, avail):
-    for cur in params.legal_sizes():
-        t = expansion_target(cur, params, avail)
-        assert cur <= t <= params.max_procs
-        s = shrink_target(cur, params)
-        assert params.preferred <= s <= cur or s == cur
+    @settings(max_examples=100, deadline=None)
+    @given(params=params_st, avail=st.integers(0, 64))
+    def test_targets_legal(params, avail):
+        for cur in params.legal_sizes():
+            t = expansion_target(cur, params, avail)
+            assert cur <= t <= params.max_procs
+            s = shrink_target(cur, params)
+            assert params.preferred <= s <= cur or s == cur
