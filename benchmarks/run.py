@@ -12,7 +12,8 @@ from benchmarks import (allocation_rate, energy, fault_tolerance,
                         kernels_bench, partial_malleability, per_job_times,
                         redistribution_overhead, scaling_study,
                         scenario_suite, submission_modes, tpu_lm_workload,
-                        usability_sloc, workload_evolution, workload_speedup)
+                        trace_replay, usability_sloc, workload_evolution,
+                        workload_speedup)
 
 BENCHES = [
     ("fig3", scaling_study),
@@ -29,6 +30,7 @@ BENCHES = [
     ("tpu_lm", tpu_lm_workload),
     ("straggler", fault_tolerance),
     ("scenarios", scenario_suite),
+    ("trace_replay", trace_replay),
 ]
 
 

@@ -1,0 +1,148 @@
+"""Trace replay at real-world scale — the event-engine benchmark.
+
+Replays Standard Workload Format traces (synthetic by default, or a real
+archive trace via ``--trace``) through the event-indexed ``Simulator``
+across a policy × submission-mode grid, reporting simulated jobs/s, wall
+time, and peak RSS.  Also times the fast engine against the golden
+``ReferenceSimulator`` on a 10k-job trace (asserting bit-identical
+metrics) and writes the result to ``BENCH_simulator.json`` at the repo
+root so the perf trajectory has a tracked datapoint.
+
+    PYTHONPATH=src python -m benchmarks.trace_replay           # default
+    PYTHONPATH=src python -m benchmarks.trace_replay --smoke   # CI-sized
+    PYTHONPATH=src python -m benchmarks.trace_replay --full    # full grid
+    PYTHONPATH=src python -m benchmarks.trace_replay --trace path/to.swf
+
+Default: the grid at 10k jobs plus 50k/100k scaling points on the paper
+policy; ``--full`` runs the grid at every size (10k/50k/100k).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import report, write_csv
+from repro.rms import (MOLDABLE, RIGID, ReferenceSimulator, SimConfig,
+                       Simulator, make_scenario)
+
+SIZES = (10_000, 50_000, 100_000)
+POLICY_NAMES = ("algorithm2", "energy", "throughput")
+MODES = (MOLDABLE, RIGID)
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_simulator.json")
+
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def replay(scenario: str, n_jobs: int, *, policy: str = "algorithm2",
+           mode: str = MOLDABLE, seed: int = 0) -> Dict:
+    jobs, overrides = make_scenario(scenario, n_jobs, mode=mode, seed=seed)
+    cfg = SimConfig(record_timeline=False, **overrides)
+    t0 = time.perf_counter()
+    res = Simulator(jobs, cfg, policy=policy).run()
+    wall = time.perf_counter() - t0
+    s = res.summary()
+    return {
+        "n_jobs": len(jobs), "policy": policy, "mode": mode,
+        "wall_s": round(wall, 3),
+        "sim_jobs_per_s": round(len(jobs) / wall, 1),
+        "peak_rss_mb": round(_peak_rss_mb(), 1),
+        "makespan_s": round(s["makespan_s"], 1),
+        "alloc_rate": round(s["alloc_rate"], 4),
+        "n_resizes": s["n_resizes"],
+    }
+
+
+def engine_speedup(n_jobs: int = 10_000, seed: int = 0) -> Dict:
+    """Fast engine vs ReferenceSimulator on one trace — must be
+    bit-identical, and is the headline speedup number."""
+    import dataclasses
+    jobs, overrides = make_scenario("trace:synthetic", n_jobs, seed=seed)
+    cfg = SimConfig(record_timeline=False, **overrides)
+    # disjoint Job instances per engine: both engines mutate job state, and
+    # summary() derives per-job metrics from it after the fact
+    jobs_fast = [dataclasses.replace(j) for j in jobs]
+    jobs_ref = [dataclasses.replace(j) for j in jobs]
+    t0 = time.perf_counter()
+    fast = Simulator(jobs_fast, cfg).run()
+    fast_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ref = ReferenceSimulator(jobs_ref, cfg).run()
+    ref_s = time.perf_counter() - t0
+    identical = fast.summary() == ref.summary() and \
+        fast.resize_log == ref.resize_log
+    assert identical, "engines diverged — run tests/test_engine_equivalence"
+    return {
+        "n_jobs": n_jobs,
+        "fast_s": round(fast_s, 3),
+        "reference_s": round(ref_s, 3),
+        "speedup": round(ref_s / fast_s, 1),
+        "sim_jobs_per_s": round(n_jobs / fast_s, 1),
+        "bit_identical": identical,
+    }
+
+
+def write_bench_json(payload: Dict) -> str:
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return BENCH_JSON
+
+
+def run(grid_sizes=(10_000,), scale_sizes=(50_000, 100_000),
+        speedup_jobs: Optional[int] = 10_000, trace: Optional[str] = None,
+        policies=POLICY_NAMES, modes=MODES) -> List[Dict]:
+    scenario = f"trace:{trace}" if trace else "trace:synthetic"
+    rows = []
+    t_start = time.perf_counter()
+    for n in grid_sizes:
+        for pol in policies:
+            for mode in modes:
+                rows.append(replay(scenario, n, policy=pol, mode=mode))
+    for n in scale_sizes:                  # scaling points, paper policy
+        rows.append(replay(scenario, n))
+    path = write_csv("trace_replay", rows)
+
+    payload: Dict = {"grid": rows}
+    derived = []
+    if rows:
+        top = max(rows, key=lambda r: r["n_jobs"])
+        derived.append(f"{top['n_jobs']}jobs:{top['wall_s']}s"
+                       f"@{top['sim_jobs_per_s']}j/s")
+    if speedup_jobs:
+        sp = engine_speedup(speedup_jobs)
+        payload["engine_speedup"] = sp
+        derived.append(f"speedup:{sp['speedup']}x@{sp['n_jobs']}jobs")
+    payload["peak_rss_mb"] = round(_peak_rss_mb(), 1)
+    json_path = write_bench_json(payload)
+    derived.append(f"csv={path};json={json_path}")
+    report("trace_replay", time.perf_counter() - t_start, ";".join(derived))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: grid + speedup at 2k jobs")
+    ap.add_argument("--full", action="store_true",
+                    help="policy x mode grid at every size (10k/50k/100k)")
+    ap.add_argument("--trace", help="replay a real SWF file instead of the "
+                    "synthetic trace")
+    args = ap.parse_args()
+    if args.smoke:
+        run(grid_sizes=(2_000,), scale_sizes=(), speedup_jobs=2_000,
+            trace=args.trace)
+    elif args.full:
+        run(grid_sizes=SIZES, scale_sizes=(), trace=args.trace)
+    else:
+        run(trace=args.trace)
+
+
+if __name__ == "__main__":
+    main()

@@ -155,7 +155,6 @@ class MalleableRunner:
         failed = {d.id for d in failed_devices}
         survivors = [d for d in self.devices if d.id not in failed]
         self.devices = survivors
-        target = self.params.clamp(len(survivors))
         # legal size at or below the survivor count
         sizes = [s for s in self.params.legal_sizes() if s <= len(survivors)]
         if not sizes:

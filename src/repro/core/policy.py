@@ -122,6 +122,21 @@ class Policy(Protocol):
 
     name: str
     backfill: bool                    # scan past a blocked queue head?
+    #: True -> ``priority_key`` depends on ``now`` (queue priorities age);
+    #: the fast engine then re-keys its queue index at every scheduling
+    #: pass instead of indexing keys once at enqueue time.
+    dynamic_priority: bool
+    #: True -> ``decide`` is a pure function of (current, params, cluster
+    #: view) plus *static* job attributes (``app``, ``params``); it must not
+    #: read mutable job state (``remaining_work``, ``boosted``) or retain
+    #: state across calls.  It additionally licenses the fast engine to
+    #: (1) memoize no-op decisions until the cluster state changes and
+    #: (2) present ``cluster.pending_min_sizes`` as a duplicate-collapsed
+    #: multiset summary (``len``/``bool`` are the true queue size;
+    #: iteration yields distinct sizes ascending).  A policy whose decision
+    #: depends on duplicate multiplicities or per-job queue entries must
+    #: set this False — it then always sees the literal per-job list.
+    decide_stateless: bool
 
     def configure(self, cfg) -> None:
         """Bind cluster constants (node count, wattage) from a SimConfig-like
@@ -145,6 +160,8 @@ class BasePolicy:
 
     name = "base"
     backfill = True
+    dynamic_priority = False          # keys below don't age with `now`
+    decide_stateless = True           # decide() is pure in its arguments
 
     def configure(self, cfg) -> None:        # pragma: no cover - trivial
         pass

@@ -1,16 +1,19 @@
 from repro.core.policy import (POLICIES, Algorithm2Policy, BasePolicy,
                                EnergyAwarePolicy, Policy,
                                ThroughputGreedyPolicy, get_policy)
-from repro.rms.scheduler import (ResizeRecord, SimConfig, SimResult,
-                                 Simulator, Timeline)
+from repro.rms.scheduler import (ReferenceSimulator, ResizeRecord, SimConfig,
+                                 SimResult, Simulator, Timeline)
 from repro.rms.workload import (APPS, MOLDABLE, RIGID, SCENARIOS,
                                 SUBMISSION_MODES, AppProfile, Job,
                                 bursty_arrivals, feitelson_arrivals,
-                                make_scenario, make_workload)
+                                generate_synthetic_swf, make_scenario,
+                                make_workload, parse_swf)
 
-__all__ = ["SimConfig", "SimResult", "Simulator", "Timeline", "ResizeRecord",
+__all__ = ["SimConfig", "SimResult", "Simulator", "ReferenceSimulator",
+           "Timeline", "ResizeRecord",
            "APPS", "AppProfile", "Job", "feitelson_arrivals", "make_workload",
            "RIGID", "MOLDABLE", "SUBMISSION_MODES", "SCENARIOS",
            "bursty_arrivals", "make_scenario",
+           "parse_swf", "generate_synthetic_swf",
            "Policy", "BasePolicy", "Algorithm2Policy", "EnergyAwarePolicy",
            "ThroughputGreedyPolicy", "POLICIES", "get_policy"]

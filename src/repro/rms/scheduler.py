@@ -1,4 +1,4 @@
-"""Slurm-analog discrete-event cluster simulator.
+"""Slurm-analog discrete-event cluster simulator — two engines, one semantics.
 
 Models the paper's §5 testbed: 128 compute nodes (1 controller excluded),
 sched/backfill with a 10-second interval, age-based multifactor priority
@@ -6,21 +6,42 @@ without walltime requests, whole-node select/linear allocation, and a
 malleability policy evaluated at scheduler ticks for every running
 malleable job (honoring per-app inhibitor periods).
 
+Two engines share one semantics (``docs/simulator.md``):
+
+* ``Simulator`` — the production engine.  Event-indexed throughout: the
+  pending queue is a set of lazy-deleted heaps bucketed by minimum request
+  (scan cost is proportional to jobs *started*, not queue length), running
+  membership is an insertion-ordered dict, allocation / reclaimable-worker
+  totals are maintained incrementally, and no-op policy decisions are
+  memoized against a cluster-state epoch counter.  Replays 100k-job SWF
+  traces in well under a minute.
+* ``ReferenceSimulator`` — the original list-based engine: full queue
+  re-sort per tick, ``list.remove`` membership, per-job view construction.
+  O(n²)-ish but obviously correct; kept as the golden model.  The two
+  engines produce bit-identical ``SimResult`` metrics and ``resize_log``
+  (``tests/test_engine_equivalence.py``).
+
 The scheduling engine is policy-driven: ``Simulator(jobs, cfg, policy=...)``
 accepts any ``repro.core.policy.Policy`` (or registry name).  The policy
 owns queue ordering (``priority_key``), backfill behavior (``backfill``),
 and the grow/shrink decision (``decide``); the engine owns event handling,
-resource accounting and the §3.2 inhibitor periods.  Default policy is the
-paper's Algorithm 2.
+resource accounting and the §3.2 inhibitor periods.  Policies additionally
+declare ``dynamic_priority`` (queue keys age with time → the fast engine
+rebuilds its heaps instead of indexing them) and ``decide_stateless``
+(``decide`` is a pure function of its arguments → no-op decisions may be
+memoized).  Default policy is the paper's Algorithm 2.
 
 Resize overhead is charged per the paper's §3.2 findings: dominated by the
 data size over the interconnect bandwidth, plus a spawn term growing with the
-worker count.
+worker count.  Every resize — policy-driven *and* straggler-mitigation —
+goes through one accounting path: a ``ResizeRecord``, the ``n_resizes``
+counter, the ``resize_overhead_s`` charge, and a fresh inhibitor window.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
+from itertools import islice
 from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
@@ -53,10 +74,17 @@ class Timeline:
     running: List[int] = dataclasses.field(default_factory=list)
     completed: List[int] = dataclasses.field(default_factory=list)
 
+    def as_arrays(self) -> "Timeline":
+        """Freeze the per-tick samples into numpy arrays (vectorized form)."""
+        return Timeline(t=np.asarray(self.t, dtype=np.float64),
+                        allocated=np.asarray(self.allocated, dtype=np.int64),
+                        running=np.asarray(self.running, dtype=np.int64),
+                        completed=np.asarray(self.completed, dtype=np.int64))
+
 
 @dataclasses.dataclass(frozen=True)
 class ResizeRecord:
-    """One policy-driven resize, for audit/invariant checks."""
+    """One resize (policy-driven or straggler mitigation), for audit."""
     t: float
     jid: int
     kind: str                              # "expand" | "shrink"
@@ -78,9 +106,15 @@ class SimResult:
     resize_log: List[ResizeRecord] = dataclasses.field(default_factory=list)
 
     def mean(self, fn) -> float:
+        if not self.jobs:                  # np.mean([]) warns and returns NaN
+            return 0.0
         return float(np.mean([fn(j) for j in self.jobs]))
 
     def summary(self) -> Dict[str, float]:
+        # degenerate workloads (empty, or all jobs at t=0 with no runtime)
+        # yield well-defined zeros instead of NaN / ZeroDivision warnings
+        throughput = len(self.jobs) / self.makespan if self.makespan > 0 \
+            else 0.0
         return {
             "makespan_s": self.makespan,
             "mean_wait_s": self.mean(Job.waiting),
@@ -88,12 +122,50 @@ class SimResult:
             "mean_completion_s": self.mean(Job.completion),
             "alloc_rate": self.alloc_rate,
             "energy_kwh": self.energy_kwh,
-            "throughput_jps": len(self.jobs) / self.makespan,
+            "throughput_jps": throughput,
             "n_resizes": self.n_resizes,
         }
 
 
-class Simulator:
+class _PendingMins:
+    """Multiset summary of the pending jobs' minimum requests.
+
+    Duck-types the ``ClusterView.pending_min_sizes`` sequence without
+    materializing one int per queued job: ``len``/``bool`` reflect the true
+    queue size, iteration yields the *distinct* minimum sizes in ascending
+    order.  Every aggregate the built-in policies compute (`truthiness,
+    ``min(...)``, ``any(x >= m for m in ...)``) is unchanged by collapsing
+    duplicates.  Only ``decide_stateless`` policies see this view — for
+    anything else the fast engine materializes the reference engine's
+    literal per-job list.
+    """
+
+    __slots__ = ("_counts", "_n")
+
+    def __init__(self, counts: Dict[int, int], n: int):
+        self._counts = counts
+        self._n = n
+
+    def __bool__(self) -> bool:
+        return self._n > 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __iter__(self):
+        return iter(sorted(self._counts))
+
+
+class _SimulatorBase:
+    """Shared semantics: event loop, work accounting, resize accounting.
+
+    Work progress is accounted *lazily*: a job's ``remaining_work`` is only
+    brought up to date (``_sync``) when the job itself is touched — at
+    (re)scheduling, resize, straggle, and completion points.  Both engines
+    sync at exactly the same points, so their floating-point results are
+    bit-identical.
+    """
+
     def __init__(self, jobs: List[Job], config: Optional[SimConfig] = None,
                  policy: Union[str, Policy, None] = None):
         self.cfg = config or SimConfig()
@@ -104,215 +176,564 @@ class Simulator:
             j.start_time = j.end_time = -1.0
             j.nprocs = 0
             j.remaining_work = 1.0
+            j.last_update = 0.0
+            j.work_synced_t = 0.0
             j.boosted = False
             j.next_reconfig_ok = 0.0
             j.straggling = False
 
-    # ------------------------------------------------------------------
+    # -- shared accounting ---------------------------------------------
     def _resize_overhead(self, job: Job, new_p: int) -> float:
         xfer = job.app.state_mb / (self.cfg.bandwidth_gbps * 125.0)
         return xfer + self.cfg.spawn_base_s + self.cfg.spawn_per_proc_s * new_p
 
+    def _rate(self, j: Job) -> float:
+        r = j.rate(j.nprocs)
+        return r * self.cfg.straggler_slowdown if j.straggling else r
+
+    def _sync(self, j: Job, t: float) -> None:
+        """Bring j.remaining_work up to time t (work pauses until
+        j.last_update while a resize's overhead is being paid)."""
+        eff = j.last_update if j.last_update > j.work_synced_t \
+            else j.work_synced_t
+        if t > eff:
+            j.remaining_work -= (t - eff) * self._rate(j)
+        if t > j.work_synced_t:
+            j.work_synced_t = t
+
+    def _schedule_completion(self, j: Job) -> None:
+        self._sync(j, self.now)
+        self.version[j.jid] = ver = self.version.get(j.jid, 0) + 1
+        pause = max(0.0, j.last_update - self.now)
+        t_done = self.now + pause + max(j.remaining_work, 0.0) / self._rate(j)
+        heapq.heappush(self.comp_heap, (t_done, ver, j.jid))
+
+    def _start(self, j: Job, p: int) -> None:
+        j.nprocs = p
+        j.start_time = self.now
+        j.last_update = self.now
+        j.work_synced_t = self.now
+        j.next_reconfig_ok = self.now + j.app.params.sched_period_s
+        self._on_start(j)
+        self._schedule_completion(j)
+
+    def _apply_resize(self, j: Job, target: int, kind: str,
+                      clear_straggle: bool = False) -> None:
+        """The single resize-accounting path (policy and straggler alike):
+        sync work at the old rate, move the workers, charge the overhead,
+        log the record, and re-arm the §3.2 inhibitor window."""
+        self._sync(j, self.now)
+        if clear_straggle:
+            j.straggling = False
+        ovh = self._resize_overhead(j, target)
+        self._on_resize(j, target)
+        old = j.nprocs
+        j.nprocs = target
+        j.last_update = self.now + ovh
+        j.next_reconfig_ok = self.now + max(
+            j.app.params.sched_period_s, j.app.step_time(target),
+            self.cfg.backfill_interval_s)
+        self.resize_log.append(ResizeRecord(
+            t=self.now, jid=j.jid, kind=kind,
+            from_procs=old, to_procs=target))
+        self.n_resizes += 1
+        self.resize_overhead_s += ovh
+        self._post_resize(j)
+        self._schedule_completion(j)
+
+    def _consider(self, j: Job, view: ClusterView) -> bool:
+        """Evaluate the policy for one running malleable job; True iff the
+        job was resized (identical decision path in both engines)."""
+        act = self.policy.decide(j.nprocs, j.app.params, view, job=j)
+        if act.kind == "none" or act.target == j.nprocs:
+            return False
+        # engine-side safety: never outside [min, max] regardless of what
+        # the policy asked for
+        target = j.app.params.clamp(act.target)
+        if target == j.nprocs:
+            return False
+        if act.kind == "expand":
+            if target - j.nprocs > self.free:
+                return False
+            self._apply_resize(j, target, "expand")
+        else:
+            self._apply_resize(j, target, "shrink")
+            # paper: the enabled pending job gets the highest priority
+            self._boost_pending()
+        return True
+
+    def _straggler_pass(self) -> None:
+        cfg = self.cfg
+        n_run = self._n_running()
+        if not cfg.straggler_mtbf_s or not n_run:
+            return
+        # Poisson arrivals of slow nodes across the allocated fleet
+        p = cfg.backfill_interval_s * n_run / cfg.straggler_mtbf_s
+        if self.strag_rng.random() < min(p, 1.0):
+            victim = self._running_at(int(self.strag_rng.integers(n_run)))
+            if not victim.straggling:
+                self._sync(victim, self.now)   # past work at the full rate
+                victim.straggling = True
+                self.n_stragglers += 1
+                self._schedule_completion(victim)
+        # mitigation: malleable jobs shrink the slow node away — through
+        # the same accounting path as any other resize, honoring the same
+        # §3.2 inhibitor window (a straggling job whose window is still
+        # open waits it out and is re-checked at the next tick)
+        for j in self._running_iter():
+            if j.straggling and j.malleable and \
+                    self.now >= j.next_reconfig_ok and \
+                    j.nprocs > j.app.params.min_procs:
+                sizes = [s for s in j.app.params.legal_sizes()
+                         if s < j.nprocs]
+                if not sizes:
+                    continue
+                self._apply_resize(j, max(sizes), "shrink",
+                                   clear_straggle=True)
+                self.n_mitigations += 1
+
+    def _advance(self, to: float) -> None:
+        dt = to - self.now
+        if dt <= 0:
+            self.now = max(self.now, to)
+            return
+        self.node_sec_alloc += self._alloc_now() * dt
+        self.now = to
+
+    def _pop_completions(self) -> bool:
+        progressed = False
+        heap = self.comp_heap
+        while heap and heap[0][0] <= self.now + 1e-9:
+            _, ver, jid = heapq.heappop(heap)
+            j = self.by_id[jid]
+            if self.version.get(jid) != ver or j.end_time >= 0:
+                continue
+            self._sync(j, self.now)
+            if j.remaining_work > 1e-9:      # stale (resized): reschedule
+                self._schedule_completion(j)
+                continue
+            j.end_time = self.now
+            self._finish(j)
+            progressed = True
+        return progressed
+
+    # -- main loop ------------------------------------------------------
     def run(self) -> SimResult:
         cfg = self.cfg
-        pending: List[Job] = []
-        running: List[Job] = []
-        completed: List[Job] = []
-        free = cfg.nodes
-        now = 0.0
-        arr_i = 0
-        version: Dict[int, int] = {}
-        comp_heap: List[Tuple[float, int, int]] = []   # (time, ver, jid)
-        by_id = {j.jid: j for j in self.jobs}
-        node_sec_alloc = 0.0
-        n_resizes = 0
-        resize_overhead = 0.0
-        n_stragglers = 0
-        n_mitigations = 0
-        strag_rng = np.random.default_rng(cfg.straggler_seed)
-        timeline = Timeline()
-        resize_log: List[ResizeRecord] = []
-
-        def _rate(j: Job) -> float:
-            r = j.rate(j.nprocs)
-            return r * cfg.straggler_slowdown if j.straggling else r
-
-        def advance(to: float):
-            nonlocal node_sec_alloc, now
-            dt = to - now
-            if dt <= 0:
-                now = max(now, to)
-                return
-            alloc = sum(j.nprocs for j in running)
-            node_sec_alloc += alloc * dt
-            for j in running:
-                eff_start = max(now, j.last_update)   # paused during overhead
-                if to > eff_start:
-                    j.remaining_work -= (to - eff_start) * _rate(j)
-            now = to
-
-        def schedule_completion(j: Job):
-            version[j.jid] = version.get(j.jid, 0) + 1
-            pause = max(0.0, j.last_update - now)
-            t_done = now + pause + max(j.remaining_work, 0.0) / _rate(j)
-            heapq.heappush(comp_heap, (t_done, version[j.jid], j.jid))
-
-        def start_job(j: Job, p: int):
-            nonlocal free
-            j.nprocs = p
-            j.start_time = now
-            j.last_update = now
-            j.next_reconfig_ok = now + j.app.params.sched_period_s
-            free -= p
-            running.append(j)
-            schedule_completion(j)
-
-        def try_schedule():
-            nonlocal free
-            # queue order is policy-owned; default (Algorithm 2) is the
-            # multifactor: boosted (post-shrink beneficiaries) first, then age
-            order = sorted(pending,
-                           key=lambda j: self.policy.priority_key(j, now))
-            for j in order:
-                lo, hi = j.request()
-                if j.moldable:
-                    if free >= lo:
-                        start_job(j, min(free, hi))
-                        pending.remove(j)
-                        continue
-                else:
-                    if free >= hi:
-                        start_job(j, hi)
-                        pending.remove(j)
-                        continue
-                # blocked: backfill policies keep scanning later jobs,
-                # strict-FCFS policies stop at the queue head
-                if not self.policy.backfill:
-                    break
-
-        def straggler_pass():
-            nonlocal n_stragglers, n_mitigations, free
-            if not cfg.straggler_mtbf_s or not running:
-                return
-            # Poisson arrivals of slow nodes across the allocated fleet
-            p = cfg.backfill_interval_s * len(running) / cfg.straggler_mtbf_s
-            if strag_rng.random() < min(p, 1.0):
-                victim = running[int(strag_rng.integers(len(running)))]
-                if not victim.straggling:
-                    victim.straggling = True
-                    n_stragglers += 1
-                    schedule_completion(victim)
-            # mitigation: malleable jobs shrink the slow node away
-            for j in running:
-                if j.straggling and j.malleable and \
-                        j.nprocs > j.app.params.min_procs:
-                    sizes = [s for s in j.app.params.legal_sizes()
-                             if s < j.nprocs]
-                    if not sizes:
-                        continue
-                    tgt = max(sizes)
-                    free += j.nprocs - tgt
-                    j.nprocs = tgt
-                    j.straggling = False
-                    j.last_update = now + self._resize_overhead(j, tgt)
-                    n_mitigations += 1
-                    schedule_completion(j)
-
-        def malleability_pass():
-            nonlocal free, n_resizes, resize_overhead
-            for j in sorted(running, key=lambda x: x.next_reconfig_ok):
-                if not j.malleable or now < j.next_reconfig_ok:
-                    continue
-                reclaimable = sum(
-                    max(0, o.nprocs - o.app.params.preferred)
-                    for o in running if o.malleable and o is not j)
-                view = ClusterView(
-                    available=free,
-                    pending_min_sizes=[p.request()[0] for p in pending],
-                    reclaimable_others=reclaimable)
-                act = self.policy.decide(j.nprocs, j.app.params, view, job=j)
-                if act.kind == "none" or act.target == j.nprocs:
-                    continue
-                # engine-side safety: never outside [min, max] regardless of
-                # what the policy asked for
-                target = j.app.params.clamp(act.target)
-                if target == j.nprocs:
-                    continue
-                ovh = self._resize_overhead(j, target)
-                if act.kind == "expand":
-                    grab = target - j.nprocs
-                    if grab > free:
-                        continue
-                    free -= grab
-                else:
-                    released = j.nprocs - target
-                    free += released
-                    # paper: the enabled pending job gets the highest priority
-                    for p in sorted(pending, key=lambda x: x.submit_time):
-                        if p.request()[0] <= free:
-                            p.boosted = True
-                            break
-                resize_log.append(ResizeRecord(
-                    t=now, jid=j.jid, kind=act.kind,
-                    from_procs=j.nprocs, to_procs=target))
-                j.nprocs = target
-                j.last_update = now + ovh
-                j.next_reconfig_ok = now + max(
-                    j.app.params.sched_period_s,
-                    j.app.step_time(j.nprocs), cfg.backfill_interval_s)
-                n_resizes += 1
-                resize_overhead += ovh
-                schedule_completion(j)
+        self.now = 0.0
+        self.free = cfg.nodes
+        self.arr_i = 0
+        self.version: Dict[int, int] = {}
+        self.comp_heap: List[Tuple[float, int, int]] = []  # (time, ver, jid)
+        self.by_id = {j.jid: j for j in self.jobs}
+        self.node_sec_alloc = 0.0
+        self.n_resizes = 0
+        self.resize_overhead_s = 0.0
+        self.n_stragglers = 0
+        self.n_mitigations = 0
+        self.strag_rng = np.random.default_rng(cfg.straggler_seed)
+        self.timeline = Timeline()
+        self.resize_log: List[ResizeRecord] = []
+        self._setup()
 
         next_tick = 0.0
         total_jobs = len(self.jobs)
-        while len(completed) < total_jobs:
+        while self._n_completed() < total_jobs:
             # next event time
-            t_arr = self.jobs[arr_i].submit_time if arr_i < total_jobs else np.inf
-            t_comp = comp_heap[0][0] if comp_heap else np.inf
+            t_arr = self.jobs[self.arr_i].submit_time \
+                if self.arr_i < total_jobs else np.inf
+            t_comp = self.comp_heap[0][0] if self.comp_heap else np.inf
             t_next = min(t_arr, t_comp, next_tick)
-            advance(t_next)
+            self._advance(t_next)
 
             progressed = False
-            if arr_i < total_jobs and now >= t_arr - 1e-9:
-                pending.append(self.jobs[arr_i])
-                arr_i += 1
+            if self.arr_i < total_jobs and self.now >= t_arr - 1e-9:
+                self._enqueue(self.jobs[self.arr_i])
+                self.arr_i += 1
                 progressed = True
-            while comp_heap and comp_heap[0][0] <= now + 1e-9:
-                _, ver, jid = heapq.heappop(comp_heap)
-                j = by_id[jid]
-                if version.get(jid) != ver or j.end_time >= 0:
-                    continue
-                if j.remaining_work > 1e-9:      # stale (resized): reschedule
-                    schedule_completion(j)
-                    continue
-                j.end_time = now
-                running.remove(j)
-                free += j.nprocs
-                completed.append(j)
+            if self._pop_completions():
                 progressed = True
-            if now >= next_tick - 1e-9:
-                try_schedule()
-                straggler_pass()
-                malleability_pass()
+            if self.now >= next_tick - 1e-9:
+                self._try_schedule()
+                self._straggler_pass()
+                self._malleability_pass()
                 if cfg.record_timeline:
-                    timeline.t.append(now)
-                    timeline.allocated.append(cfg.nodes - free)
-                    timeline.running.append(len(running))
-                    timeline.completed.append(len(completed))
-                next_tick = now + cfg.backfill_interval_s
+                    self.timeline.t.append(self.now)
+                    self.timeline.allocated.append(cfg.nodes - self.free)
+                    self.timeline.running.append(self._n_running())
+                    self.timeline.completed.append(self._n_completed())
+                next_tick = self.now + cfg.backfill_interval_s
             elif progressed:
-                try_schedule()
+                self._try_schedule()
 
-        makespan = now
-        alloc_rate = node_sec_alloc / (cfg.nodes * makespan) if makespan else 0.0
-        energy_kwh = (node_sec_alloc * cfg.loaded_w +
-                      (cfg.nodes * makespan - node_sec_alloc) * cfg.idle_w) \
-            / 3600.0 / 1000.0
+        makespan = self.now
+        alloc_rate = self.node_sec_alloc / (cfg.nodes * makespan) \
+            if makespan else 0.0
+        energy_kwh = (self.node_sec_alloc * cfg.loaded_w +
+                      (cfg.nodes * makespan - self.node_sec_alloc) *
+                      cfg.idle_w) / 3600.0 / 1000.0
         return SimResult(jobs=self.jobs, makespan=makespan,
                          alloc_rate=alloc_rate, energy_kwh=energy_kwh,
-                         n_resizes=n_resizes,
-                         resize_overhead_s=resize_overhead,
-                         timeline=timeline, n_stragglers=n_stragglers,
-                         n_straggler_mitigations=n_mitigations,
-                         resize_log=resize_log)
+                         n_resizes=self.n_resizes,
+                         resize_overhead_s=self.resize_overhead_s,
+                         timeline=self.timeline.as_arrays(),
+                         n_stragglers=self.n_stragglers,
+                         n_straggler_mitigations=self.n_mitigations,
+                         resize_log=self.resize_log)
+
+    # -- engine hooks ---------------------------------------------------
+    def _setup(self) -> None: ...
+    def _n_running(self) -> int: ...
+    def _n_completed(self) -> int: ...
+    def _running_iter(self): ...
+    def _running_at(self, i: int) -> Job: ...
+    def _alloc_now(self) -> int: ...
+    def _enqueue(self, j: Job) -> None: ...
+    def _on_start(self, j: Job) -> None: ...
+    def _finish(self, j: Job) -> None: ...
+    def _on_resize(self, j: Job, target: int) -> None: ...
+    def _post_resize(self, j: Job) -> None: ...
+    def _boost_pending(self) -> None: ...
+    def _try_schedule(self) -> None: ...
+    def _malleability_pass(self) -> None: ...
+
+
+class ReferenceSimulator(_SimulatorBase):
+    """The original list-based engine — full pending re-sort per tick,
+    O(n) ``list.remove``, per-job cluster-view construction.  Slow on big
+    workloads but structurally identical to the paper's description; the
+    fast engine is validated against it bit-for-bit."""
+
+    def _setup(self) -> None:
+        self.pending: List[Job] = []
+        self.running: List[Job] = []
+        self.completed: List[Job] = []
+
+    def _n_running(self) -> int:
+        return len(self.running)
+
+    def _n_completed(self) -> int:
+        return len(self.completed)
+
+    def _running_iter(self):
+        return self.running
+
+    def _running_at(self, i: int) -> Job:
+        return self.running[i]
+
+    def _alloc_now(self) -> int:
+        return sum(j.nprocs for j in self.running)
+
+    def _enqueue(self, j: Job) -> None:
+        self.pending.append(j)
+
+    def _on_start(self, j: Job) -> None:
+        self.free -= j.nprocs
+        self.running.append(j)
+
+    def _finish(self, j: Job) -> None:
+        self.running.remove(j)
+        self.free += j.nprocs
+        self.completed.append(j)
+
+    def _on_resize(self, j: Job, target: int) -> None:
+        self.free += j.nprocs - target     # negative delta on expand
+
+    def _post_resize(self, j: Job) -> None:
+        pass
+
+    def _boost_pending(self) -> None:
+        for p in sorted(self.pending, key=lambda x: x.submit_time):
+            if p.request()[0] <= self.free:
+                p.boosted = True
+                break
+
+    def _try_schedule(self) -> None:
+        # queue order is policy-owned; default (Algorithm 2) is the
+        # multifactor: boosted (post-shrink beneficiaries) first, then age
+        order = sorted(self.pending,
+                       key=lambda j: self.policy.priority_key(j, self.now))
+        for j in order:
+            lo, hi = j.request()
+            if j.moldable:
+                if self.free >= lo:
+                    self._start(j, min(self.free, hi))
+                    self.pending.remove(j)
+                    continue
+            else:
+                if self.free >= hi:
+                    self._start(j, hi)
+                    self.pending.remove(j)
+                    continue
+            # blocked: backfill policies keep scanning later jobs,
+            # strict-FCFS policies stop at the queue head
+            if not self.policy.backfill:
+                break
+
+    def _malleability_pass(self) -> None:
+        for j in sorted(self.running, key=lambda x: x.next_reconfig_ok):
+            if not j.malleable or self.now < j.next_reconfig_ok:
+                continue
+            reclaimable = sum(
+                max(0, o.nprocs - o.app.params.preferred)
+                for o in self.running if o.malleable and o is not j)
+            view = ClusterView(
+                available=self.free,
+                pending_min_sizes=[p.request()[0] for p in self.pending],
+                reclaimable_others=reclaimable)
+            self._consider(j, view)
+
+
+class Simulator(_SimulatorBase):
+    """High-throughput event-indexed engine (the default).
+
+    Index structures (all lazily deleted — stale entries are discarded on
+    pop against per-job version counters):
+
+    * ``_prio_heaps``: pending jobs bucketed by minimum request size, each
+      bucket a heap on ``(priority_key, arrival_seq)``.  A backfill scan
+      peeks only bucket heads that fit in ``free``, so its cost is
+      proportional to the number of jobs *started*, not the queue length.
+    * ``_arrival_heaps``: the same buckets keyed by arrival order, for the
+      post-shrink boost ("earliest pending job that now fits").
+    * ``_reconfig_heap``: running malleable jobs keyed by the end of their
+      inhibitor window; the malleability pass touches only jobs whose
+      window has expired.
+    * ``_eligible``: the expired-window jobs in the reference engine's
+      evaluation order ``(next_reconfig_ok, start order)``.
+
+    Scalars ``free`` / ``_alloc`` / ``_reclaim_total`` and the pending
+    min-size multiset are maintained incrementally; ``_epoch`` counts
+    cluster-state changes so no-op ``decide`` calls of a
+    ``decide_stateless`` policy are skipped until the state they saw
+    changes.  Policies with ``dynamic_priority`` get their queue heaps
+    rebuilt at every scheduling pass instead (aged keys).
+    """
+
+    def _setup(self) -> None:
+        self._pending: Dict[int, Job] = {}         # jid -> Job, arrival order
+        self._running: Dict[int, Job] = {}         # jid -> Job, start order
+        self._n_done = 0
+        self._alloc = 0
+        self._pending_lo: Dict[int, int] = {}      # min request -> count
+        self._min_lo = np.inf                      # min over _pending_lo keys
+        self._prio_heaps: Dict[int, list] = {}     # lo -> [(key, seq, ver, jid)]
+        self._arrival_heaps: Dict[int, list] = {}  # lo -> [(seq, jid)]
+        self._reconfig_heap: List[Tuple[float, int, int]] = []
+        self._eligible: List[Tuple[float, int, int]] = []
+        self._reclaim_total = 0
+        self._epoch = 0
+        self._pass_epoch = -1
+        self._decide_memo: Dict[int, Tuple[int, int]] = {}
+        self._arr_seq = 0
+        self._start_seq = 0
+        self._dynamic = getattr(self.policy, "dynamic_priority", True)
+        self._stateless = getattr(self.policy, "decide_stateless", False)
+
+    # -- membership -----------------------------------------------------
+    def _n_running(self) -> int:
+        return len(self._running)
+
+    def _n_completed(self) -> int:
+        return self._n_done
+
+    def _running_iter(self):
+        return self._running.values()
+
+    def _running_at(self, i: int) -> Job:
+        return next(islice(self._running.values(), i, None))
+
+    def _alloc_now(self) -> int:
+        return self._alloc
+
+    # -- pending queue --------------------------------------------------
+    def _enqueue(self, j: Job) -> None:
+        lo = j.request()[0]
+        seq = self._arr_seq
+        self._arr_seq += 1
+        j._arr_seq = seq
+        j._pq_ver = 0
+        j._lo = lo
+        self._pending[j.jid] = j
+        self._pending_lo[lo] = self._pending_lo.get(lo, 0) + 1
+        if lo < self._min_lo:
+            self._min_lo = lo
+        if not self._dynamic:
+            key = self.policy.priority_key(j, self.now)
+            heapq.heappush(self._prio_heaps.setdefault(lo, []),
+                           (key, seq, 0, j.jid))
+        heapq.heappush(self._arrival_heaps.setdefault(lo, []), (seq, j.jid))
+        self._epoch += 1
+
+    def _unqueue(self, j: Job) -> None:
+        del self._pending[j.jid]
+        lo = j._lo
+        n = self._pending_lo[lo] - 1
+        if n:
+            self._pending_lo[lo] = n
+        else:
+            del self._pending_lo[lo]
+            self._min_lo = min(self._pending_lo) if self._pending_lo \
+                else np.inf
+        self._epoch += 1
+
+    def _rebuild_prio_heaps(self) -> None:
+        """dynamic_priority fallback: keys age with time, so re-key the
+        whole queue at each scheduling pass (reference-engine cost)."""
+        self._prio_heaps = heaps = {}
+        now = self.now
+        for j in self._pending.values():
+            j._pq_ver += 1
+            key = self.policy.priority_key(j, now)
+            heapq.heappush(heaps.setdefault(j._lo, []),
+                           (key, j._arr_seq, j._pq_ver, j.jid))
+
+    def _try_schedule(self) -> None:
+        if not self._pending or self.free < self._min_lo:
+            return
+        if self._dynamic:
+            self._rebuild_prio_heaps()
+        backfill = self.policy.backfill
+        pending = self._pending
+        heaps = self._prio_heaps
+        while pending:
+            best = best_heap = None
+            for lo in list(heaps):
+                h = heaps[lo]
+                while h:
+                    head = h[0]
+                    job = pending.get(head[3])
+                    if job is not None and job._pq_ver == head[2]:
+                        break
+                    heapq.heappop(h)       # lazy-deleted (started / re-keyed)
+                if not h:
+                    del heaps[lo]
+                    continue
+                if backfill and lo > self.free:
+                    continue               # backfill scans past, for free
+                if best is None or h[0][:2] < best[:2]:
+                    best, best_heap = h[0], h
+            if best is None:
+                break
+            j = pending[best[3]]
+            lo, hi = j.request()
+            if lo > self.free:             # strict FCFS: blocked queue head
+                break
+            heapq.heappop(best_heap)
+            self._unqueue(j)
+            self._start(j, min(self.free, hi) if j.moldable else hi)
+
+    def _boost_pending(self) -> None:
+        free = self.free
+        pending = self._pending
+        best = None
+        for lo in list(self._arrival_heaps):
+            if lo > free:
+                continue
+            h = self._arrival_heaps[lo]
+            while h and h[0][1] not in pending:
+                heapq.heappop(h)
+            if not h:
+                del self._arrival_heaps[lo]
+                continue
+            if best is None or h[0] < best:
+                best = h[0]
+        if best is None:
+            return
+        p = pending[best[1]]
+        if not p.boosted:
+            p.boosted = True
+            p._pq_ver += 1
+            if not self._dynamic:
+                key = self.policy.priority_key(p, self.now)
+                heapq.heappush(self._prio_heaps.setdefault(p._lo, []),
+                               (key, p._arr_seq, p._pq_ver, p.jid))
+
+    # -- running set ----------------------------------------------------
+    def _on_start(self, j: Job) -> None:
+        self.free -= j.nprocs
+        self._alloc += j.nprocs
+        j._start_seq = self._start_seq
+        self._start_seq += 1
+        self._running[j.jid] = j
+        if j.malleable:
+            self._reclaim_total += max(
+                0, j.nprocs - j.app.params.preferred)
+            heapq.heappush(self._reconfig_heap,
+                           (j.next_reconfig_ok, j._start_seq, j.jid))
+        self._epoch += 1
+
+    def _finish(self, j: Job) -> None:
+        del self._running[j.jid]
+        self.free += j.nprocs
+        self._alloc -= j.nprocs
+        if j.malleable:
+            self._reclaim_total -= max(
+                0, j.nprocs - j.app.params.preferred)
+        self._n_done += 1
+        self._epoch += 1
+
+    def _on_resize(self, j: Job, target: int) -> None:
+        delta = j.nprocs - target          # negative on expand
+        self.free += delta
+        self._alloc -= delta
+        if j.malleable:
+            pref = j.app.params.preferred
+            self._reclaim_total += max(0, target - pref) \
+                - max(0, j.nprocs - pref)
+        self._epoch += 1
+
+    def _post_resize(self, j: Job) -> None:
+        if j.malleable:
+            heapq.heappush(self._reconfig_heap,
+                           (j.next_reconfig_ok, j._start_seq, j.jid))
+
+    # -- malleability pass ----------------------------------------------
+    def _malleability_pass(self) -> None:
+        now = self.now
+        rh = self._reconfig_heap
+        newly = False
+        while rh and rh[0][0] <= now:
+            entry = heapq.heappop(rh)
+            j = self._running.get(entry[2])
+            if j is None or j.next_reconfig_ok != entry[0]:
+                continue                   # completed or re-armed since
+            self._eligible.append(entry)
+            newly = True
+        if not self._eligible:
+            return
+        if self._stateless and not newly and self._pass_epoch == self._epoch:
+            return                         # nothing a pure policy could see
+        start_epoch = self._epoch
+        keep = []
+        memo = self._decide_memo
+        stateless = self._stateless
+        # stateless policies get the compact multiset summary; anything else
+        # gets the reference engine's literal per-job list (arrival order)
+        pend_view = _PendingMins(self._pending_lo, len(self._pending)) \
+            if stateless else [p.request()[0] for p in self._pending.values()]
+        for entry in self._eligible:
+            t_ok, _, jid = entry
+            j = self._running.get(jid)
+            if j is None or j.next_reconfig_ok != t_ok:
+                continue                   # completed / resized: drop entry
+            hit = memo.get(jid)
+            if stateless and hit is not None and hit[0] == self._epoch \
+                    and hit[1] == j.nprocs:
+                keep.append(entry)
+                continue
+            recl = self._reclaim_total - max(
+                0, j.nprocs - j.app.params.preferred)
+            view = ClusterView(
+                available=self.free,
+                pending_min_sizes=pend_view,
+                reclaimable_others=recl)
+            if self._consider(j, view):
+                continue                   # re-armed; entry now stale
+            memo[jid] = (self._epoch, j.nprocs)
+            keep.append(entry)
+        self._eligible = keep
+        # arm the whole-pass skip only after a *clean* pass: if a resize
+        # changed the cluster state mid-pass, earlier jobs decided against
+        # stale state and must be re-evaluated next tick
+        self._pass_epoch = self._epoch if self._epoch == start_epoch else -1

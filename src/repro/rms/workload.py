@@ -15,6 +15,13 @@ Beyond the paper, ``SCENARIOS`` is a library of named cluster scenarios
 each returns ``(jobs, simconfig_overrides)`` so any scheduling policy can
 be evaluated against it with one call (see ``benchmarks/scenario_suite.py``).
 
+Real-world traces are first-class too: ``parse_swf`` ingests the Standard
+Workload Format (the archive format production HPC logs are published in)
+into ``Job``/``AppProfile`` objects, ``generate_synthetic_swf`` emits a
+deterministic SWF-format trace so tests and benchmarks need no downloads,
+and ``make_scenario("trace:<path>")`` / ``make_scenario("trace:synthetic")``
+wires both into the scenario library (``docs/simulator.md``).
+
 Execution-time models are Amdahl-type ``t(p) = t1*((1-f) + f/p) + c*(p-1)``
 calibrated so the 10%-threshold *gain difference* heuristic (§5.3, Fig. 3)
 yields exactly the paper's Table-5 malleability parameters — verified by
@@ -107,6 +114,7 @@ class Job:
     nprocs: int = 0
     remaining_work: float = 1.0  # normalized
     last_update: float = 0.0
+    work_synced_t: float = 0.0   # remaining_work is accurate as of this time
     next_reconfig_ok: float = 0.0
     boosted: bool = False        # paper: job that triggered a shrink gets top priority
     straggling: bool = False     # a slow node throttles the whole job
@@ -206,6 +214,155 @@ def make_workload(n_jobs: int, *, moldable: Optional[bool] = None,
 
 
 # ======================================================================
+# Standard Workload Format ingestion (real-world traces)
+# ======================================================================
+#
+# SWF is the archive format of the Parallel Workloads Archive: `;`-prefixed
+# header comments (including `MaxNodes:` / `MaxProcs:` directives) followed
+# by one 18-field whitespace-separated record per job:
+#   0 job_id   1 submit_s   2 wait_s     3 run_s      4 used_procs
+#   5 avg_cpu  6 used_mem   7 req_procs  8 req_time   9 req_mem
+#  10 status  11 uid       12 gid       13 exe       14 queue
+#  15 part    16 prev_job  17 think_s
+# Only fields 0/1/3/4 (falling back to 7) and 6 are consumed here.
+
+#: Amdahl exponent assumed for trace jobs (traces record one (procs, time)
+#: point; the profile must extrapolate to other sizes for malleability).
+SWF_ALPHA = 0.5
+
+
+def _swf_app(run_s: float, procs: int, mem_kb: float, nodes: int,
+             cache: Dict) -> AppProfile:
+    """Synthesize an ``AppProfile`` for one trace job: calibrated so
+    ``exec_time(procs) == run_s`` exactly, with a legal malleability range
+    [procs//4, 2*procs] (clamped to the cluster) around the recorded size."""
+    pref = max(1, min(procs, nodes))
+    key = (run_s, pref, mem_kb if mem_kb > 0 else -1.0)
+    app = cache.get(key)
+    if app is None:
+        lo = max(1, pref // 4)
+        hi = max(pref, min(nodes, pref * 2))
+        state_mb = mem_kb * pref / 1024.0 if mem_kb > 0 else 64.0 * pref
+        app = AppProfile(
+            name=f"swf-{pref}p", t1=run_s * pref ** SWF_ALPHA, f=1.0,
+            alpha=SWF_ALPHA, c=0.0, min_start=lo,
+            params=MalleabilityParams(lo, hi, pref, sched_period_s=10.0),
+            state_mb=state_mb,
+            iterations=max(8, min(512, int(run_s) // 30)))
+        cache[key] = app
+    return app
+
+
+def parse_swf(source, *, max_jobs: Optional[int] = None,
+              mode: str = MOLDABLE, malleable: bool = True,
+              nodes: Optional[int] = None) -> Tuple[List[Job], Dict]:
+    """Parse an SWF trace into simulator jobs.
+
+    ``source`` is a filesystem path, a string containing the trace text, or
+    an iterable of lines.  Cancelled/failed records (non-positive runtime or
+    processor count) and malformed lines are skipped, submit times are
+    re-based to t=0, and the cluster size is taken from ``nodes=``, the
+    trace's ``MaxNodes:``/``MaxProcs:`` header, or the widest job seen —
+    in that order.  Returns ``(jobs, simconfig_overrides)`` matching the
+    scenario-library contract, so ``make_scenario("trace:path.swf")`` can
+    hand the result straight to ``Simulator``.
+    """
+    is_moldable = resolve_mode(mode, None)
+    if isinstance(source, str) and "\n" in source:
+        lines = source.splitlines()
+    elif isinstance(source, (list, tuple)):
+        lines = source
+    else:
+        with open(source) as f:
+            lines = f.read().splitlines()
+
+    header: Dict[str, int] = {}
+    rows = []
+    for raw in lines:
+        s = raw.strip()
+        if not s:
+            continue
+        if s.startswith(";"):
+            body = s.lstrip(";").strip()
+            for key in ("MaxNodes", "MaxProcs"):
+                if body.startswith(key) and key not in header:
+                    try:
+                        header[key] = int(body.split(":", 1)[1].split()[0])
+                    except (IndexError, ValueError):
+                        pass
+            continue
+        f = s.split()
+        if len(f) < 5:
+            continue
+        try:
+            jid = int(f[0])
+            submit = float(f[1])
+            run_s = float(f[3])
+            procs = int(float(f[4]))
+            if procs <= 0 and len(f) > 7:
+                procs = int(float(f[7]))      # fall back to requested procs
+            mem_kb = float(f[6]) if len(f) > 6 else -1.0
+        except ValueError:
+            continue
+        if run_s <= 0 or procs <= 0:
+            continue
+        rows.append((submit, jid, run_s, procs, mem_kb))
+        if max_jobs is not None and len(rows) >= max_jobs:
+            break
+
+    # MaxNodes beats MaxProcs (whole-node allocation) wherever it appears
+    # in the header — SWF imposes no directive order
+    cluster = nodes or header.get("MaxNodes") or header.get("MaxProcs") or \
+        (max(r[3] for r in rows) if rows else 128)
+    t0 = min(r[0] for r in rows) if rows else 0.0
+    cache: Dict = {}
+    jobs = []
+    seen = set()
+    for i, (submit, jid, run_s, procs, mem_kb) in enumerate(rows):
+        if jid in seen:                       # duplicate ids: renumber
+            jid = -(i + 1)
+        seen.add(jid)
+        jobs.append(Job(jid=jid, app=_swf_app(run_s, procs, mem_kb,
+                                              cluster, cache),
+                        submit_time=submit - t0,
+                        moldable=is_moldable, malleable=malleable))
+    jobs.sort(key=lambda j: j.submit_time)
+    return jobs, {"nodes": cluster}
+
+
+def generate_synthetic_swf(n_jobs: int, *, seed: int = 0, nodes: int = 128,
+                           mean_interarrival_s: float = 6.0,
+                           mean_runtime_s: float = 120.0) -> str:
+    """Emit a deterministic synthetic trace in Standard Workload Format.
+
+    Power-of-two processor requests capped at ``nodes``, lognormal runtimes
+    around ``mean_runtime_s``, Poisson arrivals — an overloaded-queue regime
+    by default, which is what stresses the scheduler's queue indexes.  The
+    output round-trips through ``parse_swf``; tests and benchmarks use it
+    instead of downloading archive traces.
+    """
+    rng = np.random.default_rng(seed)
+    submits = np.cumsum(rng.exponential(mean_interarrival_s, size=n_jobs))
+    procs = 2 ** rng.integers(0, int(math.log2(nodes)) + 1, size=n_jobs)
+    mu = math.log(mean_runtime_s) - 0.5           # lognormal mean ~ target
+    runs = np.maximum(1.0, rng.lognormal(mu, 1.0, size=n_jobs))
+    mem_kb = 2 ** rng.integers(16, 21, size=n_jobs)      # 64 MB – 1 GB
+    lines = [
+        "; Generated by repro.rms.workload.generate_synthetic_swf",
+        f"; MaxJobs: {n_jobs}",
+        f"; MaxNodes: {nodes}",
+        f"; Note: seed={seed}",
+    ]
+    for i in range(n_jobs):
+        p = int(procs[i])
+        lines.append(
+            f"{i + 1} {submits[i]:.0f} -1 {runs[i]:.0f} {p} -1 "
+            f"{int(mem_kb[i])} {p} {runs[i] * 2:.0f} -1 1 "
+            f"-1 -1 -1 -1 -1 -1 -1")
+    return "\n".join(lines) + "\n"
+
+
+# ======================================================================
 # Scenario library (beyond-paper): named cluster situations, policy-agnostic
 # ======================================================================
 
@@ -284,9 +441,23 @@ def make_scenario(name: str, n_jobs: int = 120, *, mode: str = MOLDABLE,
 
     Returns ``(jobs, overrides)`` where ``overrides`` are keyword arguments
     for ``SimConfig`` (kept as a plain dict so the workload layer stays
-    import-independent from the scheduler)."""
+    import-independent from the scheduler).
+
+    ``"trace:<path.swf>"`` replays a Standard Workload Format trace
+    (``n_jobs`` caps how many records are ingested); ``"trace:synthetic"``
+    generates an ``n_jobs``-record synthetic SWF trace in memory — the
+    no-download stand-in used by tests and ``benchmarks/trace_replay.py``.
+    """
+    if name.startswith("trace:"):
+        spec = name[len("trace:"):]
+        if spec == "synthetic":
+            text = generate_synthetic_swf(n_jobs, seed=seed)
+            return parse_swf(text, mode=mode, malleable=malleable)
+        return parse_swf(spec, max_jobs=n_jobs, mode=mode,
+                         malleable=malleable)
     try:
         fn = SCENARIOS[name]
     except KeyError:
-        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}")
+        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}"
+                       " (or 'trace:<path.swf>' / 'trace:synthetic')")
     return fn(n_jobs, mode, malleable, seed)

@@ -1,0 +1,143 @@
+"""Golden equivalence: the event-indexed ``Simulator`` must reproduce the
+list-based ``ReferenceSimulator`` bit-for-bit — identical ``summary()``
+metrics and identical ``resize_log`` — across policies, submission modes,
+malleability mixes, scenarios (including the straggler RNG paths), and
+policy capability flags (backfill off, dynamic priorities).
+
+Seeded sweeps always run; a hypothesis property test rides along when the
+optional dependency is installed (like tests/test_policy.py).
+"""
+import pytest
+
+try:                                   # property-based dep is optional —
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                    # seeded sweeps below still run bare
+    HAVE_HYPOTHESIS = False
+
+from repro.core.policy import Algorithm2Policy
+from repro.rms import (MOLDABLE, RIGID, ReferenceSimulator, SCENARIOS,
+                       SimConfig, Simulator, make_scenario, make_workload)
+
+POLICY_NAMES = ("algorithm2", "energy", "throughput")
+
+
+def assert_equivalent(jobs, cfg=None, policy=None):
+    # each engine gets its own Job instances: the engines mutate job state
+    # in place, so sharing them would make the per-job summary metrics a
+    # ref-vs-ref comparison (apps are immutable and safely shared)
+    import dataclasses
+    cfg = cfg or SimConfig()
+    fast = Simulator([dataclasses.replace(j) for j in jobs], cfg,
+                     policy=policy).run()
+    ref = ReferenceSimulator([dataclasses.replace(j) for j in jobs], cfg,
+                             policy=policy).run()
+    assert fast.summary() == ref.summary()            # bit-identical floats
+    assert fast.resize_log == ref.resize_log
+    assert fast.n_stragglers == ref.n_stragglers
+    assert fast.n_straggler_mitigations == ref.n_straggler_mitigations
+    assert [j.jid for j in fast.jobs] == [j.jid for j in ref.jobs]
+    return fast, ref
+
+
+@pytest.mark.parametrize("policy", POLICY_NAMES)
+@pytest.mark.parametrize("mode", (RIGID, MOLDABLE))
+@pytest.mark.parametrize("seed", (0, 7))
+def test_engines_identical_across_policies_and_modes(policy, mode, seed):
+    jobs = make_workload(70, mode=mode, malleable=True, seed=seed)
+    assert_equivalent(jobs, policy=policy)
+
+
+def test_engines_identical_partial_malleability():
+    jobs = make_workload(60, mode=MOLDABLE, malleable=True, seed=11,
+                         malleable_fraction=0.5)
+    assert_equivalent(jobs)
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_engines_identical_on_scenarios(name):
+    jobs, overrides = make_scenario(name, 50, seed=3)
+    assert_equivalent(jobs, SimConfig(record_timeline=False, **overrides))
+
+
+def test_engines_identical_on_straggler_rng_paths():
+    # aggressive MTBF so stragglers *and* mitigations actually fire
+    jobs = make_workload(40, mode=MOLDABLE, malleable=True, seed=5)
+    cfg = SimConfig(straggler_mtbf_s=1500.0, straggler_seed=5)
+    fast, _ = assert_equivalent(jobs, cfg)
+    assert fast.n_stragglers > 0
+
+
+def test_engines_identical_on_swf_trace():
+    jobs, overrides = make_scenario("trace:synthetic", 200, seed=9)
+    assert_equivalent(jobs, SimConfig(record_timeline=False, **overrides))
+
+
+class _StrictFCFS(Algorithm2Policy):
+    """Exercises the no-backfill scan (stop at a blocked queue head)."""
+    name = "strict-fcfs"
+    backfill = False
+
+
+class _AgingPolicy(Algorithm2Policy):
+    """Exercises dynamic_priority: keys age with `now`, so the fast engine
+    must re-key its queue index at every scheduling pass."""
+    name = "aging"
+    dynamic_priority = True
+
+    def priority_key(self, job, now):
+        waited = now - job.submit_time
+        return (not getattr(job, "boosted", False), -waited, job.submit_time)
+
+
+class _QueueCountingPolicy(Algorithm2Policy):
+    """Exercises decide_stateless=False: decide inspects individual pending
+    entries (duplicates matter), so the fast engine must hand it the
+    literal per-job list, not the collapsed multiset view."""
+    name = "queue-counting"
+    decide_stateless = False
+
+    def decide(self, current, params, cluster, job=None):
+        # shrink only when >= 2 pending jobs would fit in the release —
+        # a duplicate-sensitive aggregate
+        fits = sum(1 for m in cluster.pending_min_sizes
+                   if m <= current - params.min_procs + cluster.available)
+        if fits >= 2 and current > params.preferred:
+            from repro.core.params import shrink_target
+            tgt = shrink_target(current, params)
+            if tgt < current:
+                from repro.core.policy import Action
+                return Action("shrink", tgt)
+        return super().decide(current, params, cluster, job=job)
+
+
+@pytest.mark.parametrize("policy_cls",
+                         (_StrictFCFS, _AgingPolicy, _QueueCountingPolicy))
+def test_engines_identical_with_capability_flags(policy_cls):
+    jobs = make_workload(60, mode=MOLDABLE, malleable=True, seed=2)
+    assert_equivalent(jobs, policy=policy_cls())
+
+
+def test_timeline_matches_reference():
+    import dataclasses
+    jobs = make_workload(50, mode=MOLDABLE, malleable=True, seed=4)
+    fast = Simulator([dataclasses.replace(j) for j in jobs],
+                     SimConfig()).run()
+    ref = ReferenceSimulator([dataclasses.replace(j) for j in jobs],
+                             SimConfig()).run()
+    assert list(fast.timeline.t) == list(ref.timeline.t)
+    assert list(fast.timeline.allocated) == list(ref.timeline.allocated)
+    assert list(fast.timeline.running) == list(ref.timeline.running)
+    assert list(fast.timeline.completed) == list(ref.timeline.completed)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(n_jobs=st.integers(5, 60), seed=st.integers(0, 2 ** 16),
+           policy=st.sampled_from(POLICY_NAMES),
+           mode=st.sampled_from((RIGID, MOLDABLE)),
+           frac=st.sampled_from((0.0, 0.5, 1.0)))
+    def test_property_engines_equivalent(n_jobs, seed, policy, mode, frac):
+        jobs = make_workload(n_jobs, mode=mode, malleable=True, seed=seed,
+                             malleable_fraction=frac)
+        assert_equivalent(jobs, policy=policy)

@@ -1,0 +1,87 @@
+"""MalleableRunner.handle_failure — the forced-shrink-onto-survivors path.
+
+Unit-level (no device farm): meshes are stubbed and redistribution is
+injected, so the test exercises exactly the failure bookkeeping — survivor
+accounting, legal-size selection, step-cache rebuild, event logging.  The
+end-to-end variant (real meshes, real state) lives in test_elastic.py.
+"""
+import pytest
+
+import repro.core.api as api
+from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
+from repro.core.redistribute import TransferStats
+
+
+class _Dev:
+    def __init__(self, i):
+        self.id = i
+
+
+class _FakeApp:
+    """Minimal MalleableApp: state is a dict, steps are no-ops."""
+
+    def init_state(self, mesh):
+        return {"w": 0}
+
+    def state_shardings(self, mesh):
+        return ("shard", mesh)
+
+    def make_step(self, mesh):
+        return lambda state, step, *a: (state, {})
+
+
+def _runner(monkeypatch, n_devices=8, params=None):
+    monkeypatch.setattr(api, "make_job_mesh",
+                        lambda devices, max_model=16: ("mesh", len(devices)))
+    xfers = []
+
+    def redistribute(state, shardings):
+        stats = TransferStats(bytes_moved=8, seconds=0.0, n_leaves=1)
+        xfers.append(stats)
+        return state, stats
+
+    r = MalleableRunner(_FakeApp(), params or MalleabilityParams(2, 8, 4),
+                        ScriptedRMS({}), devices=[_Dev(i) for i in
+                                                  range(n_devices)],
+                        redistribute=redistribute)
+    return r, xfers
+
+
+def test_failure_shrinks_to_largest_legal_survivor_size(monkeypatch):
+    r, xfers = _runner(monkeypatch)
+    state = r.init()
+    r.prewarm()                                  # cache sizes {2, 4, 8}
+    assert set(r._step_cache) == {2, 4, 8}
+
+    state = r.handle_failure(state, step=3, failed_devices=r.devices[3:])
+    # 3 survivors -> largest legal size <= 3 is 2 (legal: 2, 4, 8)
+    assert r.current == 2
+    assert len(r.devices) == 3
+    # the stale executables for dead meshes are gone; the survivor mesh
+    # was recompiled into a fresh cache
+    assert set(r._step_cache) == {2}
+    # the shrink went through the normal resize path: logged + resharded
+    assert len(r.events) == 1
+    ev = r.events[0]
+    assert (ev.action, ev.from_procs, ev.to_procs) == ("shrink", 4, 2)
+    assert ev.step == 3
+    assert xfers, "state was not redistributed onto the survivor mesh"
+
+
+def test_failure_below_min_procs_raises(monkeypatch):
+    r, _ = _runner(monkeypatch)
+    state = r.init()
+    with pytest.raises(RuntimeError, match="survivors"):
+        r.handle_failure(state, step=0, failed_devices=r.devices[1:])
+
+
+def test_failure_keeping_current_size_still_rebuilds(monkeypatch):
+    # 8 devices, running at 4: losing the 4 spare devices must not resize
+    # (4 survivors support the current size) but still rebuilds the cache
+    r, _ = _runner(monkeypatch)
+    state = r.init()
+    r.prewarm()
+    state = r.handle_failure(state, step=5, failed_devices=r.devices[4:])
+    assert r.current == 4
+    assert set(r._step_cache) == {4}
+    assert len(r.devices) == 4

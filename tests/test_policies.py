@@ -157,6 +157,76 @@ def test_throughput_policy_shrinks_to_unblock():
     assert 32 - act.target >= 2
 
 
+# -- straggler-mitigation accounting -----------------------------------
+
+def _straggler_sim(policy="algorithm2", seed=5):
+    return _sim(40, policy=policy, seed=seed,
+                straggler_mtbf_s=1500.0, straggler_seed=seed)
+
+
+def test_straggler_shrinks_are_accounted_as_resizes():
+    """Straggler-mitigation shrinks go through the same accounting path as
+    policy resizes: logged, counted, and charged."""
+    res = _straggler_sim()
+    assert res.n_straggler_mitigations > 0
+    assert res.n_resizes == len(res.resize_log)
+    # every mitigation appears in the log as a shrink onto a legal size
+    by_id = {j.jid: j for j in res.jobs}
+    shrinks = [r for r in res.resize_log if r.kind == "shrink"]
+    assert len(shrinks) >= res.n_straggler_mitigations
+    for r in res.resize_log:
+        p = by_id[r.jid].app.params
+        assert p.min_procs <= r.to_procs <= p.max_procs
+        assert r.to_procs in p.legal_sizes()
+        assert (r.kind == "expand") == (r.to_procs > r.from_procs)
+    assert res.resize_overhead_s > 0
+
+
+def test_straggler_shrinks_honor_inhibitor_windows():
+    """A mitigation re-arms the §3.2 inhibitor like any resize: consecutive
+    resizes of one job stay spaced by at least its sched_period_s."""
+    res = _straggler_sim()
+    assert res.n_straggler_mitigations > 0
+    last = {}
+    by_id = {j.jid: j for j in res.jobs}
+    for r in res.resize_log:
+        if r.jid in last:
+            gap = r.t - last[r.jid]
+            assert gap + 1e-6 >= by_id[r.jid].app.params.sched_period_s
+        last[r.jid] = r.t
+
+
+def test_straggler_mitigation_waits_out_long_inhibitors():
+    """Regression: with sched_period_s longer than the 10 s tick, a policy
+    resize followed by straggler onset must NOT mitigate inside the
+    inhibitor window — the gap invariant holds beyond the tick length."""
+    import dataclasses
+    from repro.rms import APPS, make_workload
+    from repro.core import MalleabilityParams
+    slow_app = dataclasses.replace(
+        APPS["cg"], name="cg-slow-inhibit",
+        params=MalleabilityParams(2, 32, 16, sched_period_s=30.0))
+    jobs = make_workload(40, mode=MOLDABLE, malleable=True, seed=5,
+                         app_pool=[slow_app])
+    res = Simulator(jobs, SimConfig(straggler_mtbf_s=400.0,
+                                    straggler_seed=5)).run()
+    assert res.n_straggler_mitigations > 0
+    last = {}
+    for r in res.resize_log:
+        if r.jid in last:
+            assert r.t - last[r.jid] + 1e-6 >= 30.0, r
+        last[r.jid] = r.t
+
+
+def test_straggler_counters_without_malleability():
+    """Non-malleable jobs cannot mitigate: stragglers occur, no resizes."""
+    res = _sim(40, malleable=False, seed=5,
+               straggler_mtbf_s=1500.0, straggler_seed=5)
+    assert res.n_stragglers > 0
+    assert res.n_straggler_mitigations == 0
+    assert res.n_resizes == 0 and not res.resize_log
+
+
 # -- scenario library --------------------------------------------------
 
 @pytest.mark.parametrize("name", sorted(SCENARIOS))

@@ -69,6 +69,31 @@ def test_rigid_jobs_never_resize():
     assert res.n_resizes == 0
 
 
+def test_empty_workload_summary_is_finite():
+    """Degenerate workloads yield well-defined zeros, not NaN warnings."""
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # np.mean([]) would raise here
+        s = Simulator([], SimConfig()).run().summary()
+    assert s["makespan_s"] == 0.0
+    assert s["mean_wait_s"] == s["mean_exec_s"] == s["mean_completion_s"] == 0.0
+    assert s["throughput_jps"] == 0.0 and s["alloc_rate"] == 0.0
+    assert all(v == v for v in s.values())    # no NaNs anywhere
+
+
+def test_single_instant_job_summary_is_finite():
+    import warnings
+    from repro.rms import ReferenceSimulator
+    jobs = make_workload(1, moldable=True, malleable=False, seed=0)
+    jobs[0].submit_time = 0.0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        s = Simulator(jobs, SimConfig()).run().summary()
+        r = ReferenceSimulator(jobs, SimConfig()).run().summary()
+    assert s == r
+    assert s["makespan_s"] > 0 and s["throughput_jps"] > 0
+
+
 def test_partial_malleability_monotonic():
     """Table 7: completion time improves with the malleable fraction."""
     times = []

@@ -1,0 +1,114 @@
+"""SWF trace ingestion: parser, synthetic generator, scenario wiring."""
+import pytest
+
+from repro.rms import (MOLDABLE, RIGID, SimConfig, Simulator,
+                       generate_synthetic_swf, make_scenario, parse_swf)
+
+SWF_SAMPLE = """\
+; Sample trace (abridged header)
+; MaxNodes: 64
+; MaxProcs: 256
+1 0 10 3600 16 -1 524288 16 7200 -1 1 1 1 -1 1 -1 -1 -1
+2 30 5 1800 8 -1 -1 8 3600 -1 1 1 1 -1 1 -1 -1 -1
+3 60 0 0 8 -1 -1 8 3600 -1 0 1 1 -1 1 -1 -1 -1
+4 90 0 600 0 -1 -1 4 1200 -1 1 1 1 -1 1 -1 -1 -1
+garbage line that is not a record
+5 120 0 900
+6 150 0 450 128 -1 -1 128 900 -1 1 1 1 -1 1 -1 -1 -1
+"""
+
+
+def test_parse_swf_basics():
+    jobs, overrides = parse_swf(SWF_SAMPLE)
+    # record 3 (zero runtime) and record 5 (too few fields) are dropped;
+    # record 4 falls back to the requested processor count
+    assert [j.jid for j in jobs] == [1, 2, 4, 6]
+    assert overrides == {"nodes": 64}          # MaxNodes beats MaxProcs
+    by_id = {j.jid: j for j in jobs}
+    # calibration: the profile reproduces the recorded (procs, runtime) point
+    assert by_id[1].app.exec_time(16) == pytest.approx(3600.0)
+    assert by_id[2].app.exec_time(8) == pytest.approx(1800.0)
+    assert by_id[4].app.params.preferred == 4   # req_procs fallback
+    # submit times re-based to t=0, order preserved
+    assert jobs[0].submit_time == 0.0
+    assert [j.submit_time for j in jobs] == sorted(j.submit_time
+                                                   for j in jobs)
+    # wider-than-cluster request is clamped to the cluster
+    assert by_id[6].app.params.max_procs <= 64
+
+
+def test_parse_swf_malleability_range_is_legal():
+    jobs, _ = parse_swf(SWF_SAMPLE)
+    for j in jobs:
+        p = j.app.params
+        assert 1 <= p.min_procs <= p.preferred <= p.max_procs
+        assert j.moldable and j.malleable      # defaults
+
+
+def test_parse_swf_modes_and_flags():
+    jobs, _ = parse_swf(SWF_SAMPLE, mode=RIGID, malleable=False)
+    assert all(not j.moldable and not j.malleable for j in jobs)
+    lo, hi = jobs[0].request()
+    assert lo == hi                            # rigid: exact request
+
+
+def test_parse_swf_maxnodes_wins_regardless_of_header_order():
+    trace = ("; MaxProcs: 512\n; MaxNodes: 64\n"
+             "1 0 0 100 4 -1 -1 4 200 -1 1 -1 -1 -1 -1 -1 -1 -1\n")
+    _, overrides = parse_swf(trace)
+    assert overrides == {"nodes": 64}
+
+
+def test_parse_swf_fractional_runtimes_not_conflated():
+    trace = ("1 0 0 100.2 4 -1 -1 4 200 -1 1 -1 -1 -1 -1 -1 -1 -1\n"
+             "2 5 0 100.9 4 -1 -1 4 200 -1 1 -1 -1 -1 -1 -1 -1 -1\n")
+    jobs, _ = parse_swf(trace)
+    by_id = {j.jid: j for j in jobs}
+    assert by_id[1].app.exec_time(4) == pytest.approx(100.2)
+    assert by_id[2].app.exec_time(4) == pytest.approx(100.9)
+
+
+def test_parse_swf_duplicate_ids_renumbered():
+    dup = "1 0 0 100 4 -1 -1 4 200 -1 1 -1 -1 -1 -1 -1 -1 -1\n" \
+          "1 10 0 100 4 -1 -1 4 200 -1 1 -1 -1 -1 -1 -1 -1 -1\n"
+    jobs, _ = parse_swf(dup)
+    assert len({j.jid for j in jobs}) == 2
+
+
+def test_parse_swf_from_file(tmp_path):
+    p = tmp_path / "tiny.swf"
+    p.write_text(SWF_SAMPLE)
+    jobs, overrides = parse_swf(str(p), max_jobs=2)
+    assert len(jobs) == 2 and overrides["nodes"] == 64
+
+
+def test_generate_synthetic_swf_deterministic_and_round_trips():
+    a = generate_synthetic_swf(50, seed=3)
+    assert a == generate_synthetic_swf(50, seed=3)
+    assert a != generate_synthetic_swf(50, seed=4)
+    jobs, overrides = parse_swf(a)
+    assert len(jobs) == 50
+    assert overrides == {"nodes": 128}         # header directive honored
+    assert all(1 <= j.app.params.preferred <= 128 for j in jobs)
+
+
+def test_trace_scenario_runs_to_completion():
+    jobs, overrides = make_scenario("trace:synthetic", 80, mode=MOLDABLE,
+                                    seed=1)
+    res = Simulator(jobs, SimConfig(record_timeline=False, **overrides)).run()
+    assert all(j.end_time >= j.start_time >= j.submit_time >= 0
+               for j in res.jobs)
+    assert res.makespan > 0
+
+
+def test_trace_scenario_from_file(tmp_path):
+    p = tmp_path / "t.swf"
+    p.write_text(generate_synthetic_swf(30, seed=2))
+    jobs, overrides = make_scenario(f"trace:{p}", 20)
+    assert len(jobs) == 20                     # n_jobs caps ingestion
+    assert overrides["nodes"] == 128
+
+
+def test_unknown_scenario_message_mentions_traces():
+    with pytest.raises(KeyError, match="trace:"):
+        make_scenario("no-such-scenario")
