@@ -19,9 +19,12 @@ PAPER_TABLE2 = [
 ]
 
 # the malleability integration in quickstart.py: runner construction + loop
+# (repro.dmr facade names + the pre-facade spellings, for the migration docs)
 INTEGRATION_RE = re.compile(
     r"(MalleabilityParams|MalleableRunner|ScriptedRMS|maybe_reconfig|"
-    r"runner\.(init|step|events)|LMTrainApp)")
+    r"runner\.(init|step|events)|LMTrainApp|lm_train_app|"
+    r"dmr\.(App|set_parameters|connect|reconfig|MalleableRunner)|"
+    r"@app\.(init|shardings|step))")
 
 
 def sloc(path: str, only_integration: bool) -> int:

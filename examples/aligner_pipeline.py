@@ -2,9 +2,12 @@
 
 Reader -> workers -> writer: workers k-mer-match read chunks against a
 reference table; chunk boundaries make the communication pattern irregular,
-so (exactly as in the paper) the job supplies a CUSTOM redistribution: only
-the stream cursor and accumulated counts move on a resize, while the
-reference table is re-replicated. Minimum workers = 3 (reader + writer + 1).
+so (exactly as in the paper) the job selects non-default redistribution —
+but instead of hand-writing send/recv functions, it names a Table-1 pattern
+per state subtree: the reference table is re-replicated
+(``patterns={"table": "replicate"}``) while the stream cursor and
+accumulated counts ride the default pattern.  Minimum workers = 3
+(reader + writer + 1).
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 python examples/aligner_pipeline.py
 """
@@ -16,14 +19,14 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import warnings
 
 warnings.filterwarnings("ignore")
+warnings.filterwarnings("error", message=r".*repro\.dmr.*")
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
-from repro.core.redistribute import TransferStats, state_bytes
+import repro.dmr as dmr
 
 K = 8                       # k-mer length
 REF_LEN = 1 << 14
@@ -36,7 +39,6 @@ def make_reference():
     rng = np.random.default_rng(3)
     ref = rng.integers(0, 4, REF_LEN).astype(np.int32)
     pows = 4 ** np.arange(K)
-    kmers = np.convolve(ref, np.zeros(1), "same")  # placeholder
     idx = np.arange(REF_LEN - K + 1)
     kmer_ids = (ref[idx[:, None] + np.arange(K)] * pows).sum(-1)
     table = np.zeros(4 ** K, np.int32)
@@ -49,79 +51,74 @@ def reads_for_chunk(c):
     return rng.integers(0, 4, (CHUNK_READS, READ_LEN)).astype(np.int32)
 
 
-class AlignerApp:
-    """Irregular producer/consumer: custom redistribution (cursor + counts)."""
+_, TABLE = make_reference()
 
-    def __init__(self):
-        _, self.table = make_reference()
+# irregular producer/consumer: the reference table re-replicates on every
+# resize, everything else (scalars) moves with the default pattern
+app = dmr.App(name="aligner", patterns={"table": "replicate"})
 
-    def state_shardings(self, mesh):
-        rep = NamedSharding(mesh, P())
-        return {"table": rep, "cursor": rep, "matched": rep, "total": rep}
 
-    def init_state(self, mesh):
-        sh = self.state_shardings(mesh)
-        return jax.device_put(
-            {"table": self.table, "cursor": jnp.int32(0),
-             "matched": jnp.int32(0), "total": jnp.int32(0)}, sh)
+@app.shardings
+def shardings(mesh):
+    rep = NamedSharding(mesh, P())
+    return {"table": rep, "cursor": rep, "matched": rep, "total": rep}
 
-    def redistribute(self, state, new_shardings):
-        """Custom path (the paper's user send/recv functions): move only the
-        scalars; the reference table is re-replicated from the host copy."""
-        small = {k: v for k, v in state.items() if k != "table"}
-        moved = jax.device_put(small, {k: new_shardings[k] for k in small})
-        moved["table"] = jax.device_put(self.table, new_shardings["table"])
-        jax.block_until_ready(moved)
-        return moved, TransferStats(bytes_moved=state_bytes(small),
-                                    seconds=0.0, n_leaves=len(small) + 1)
 
-    def make_step(self, mesh):
-        n_workers = max(mesh.devices.size - 2, 1)   # reader + writer reserved
-        sh = self.state_shardings(mesh)
+@app.init
+def init(mesh):
+    return jax.device_put(
+        {"table": TABLE, "cursor": jnp.int32(0),
+         "matched": jnp.int32(0), "total": jnp.int32(0)}, shardings(mesh))
 
-        @jax.jit
-        def align(state, reads):
-            pows = 4 ** jnp.arange(K)
-            windows = jnp.stack([reads[:, i:i + K]
-                                 for i in range(READ_LEN - K + 1)], 1)
-            ids = jnp.sum(windows * pows, -1)            # (reads, windows)
-            hits = state["table"][ids] > 0
-            matched = jnp.sum(jnp.any(hits, axis=1))
-            return matched
 
-        def fn(state, step):
-            state = jax.device_put(state, sh)
-            c = int(jax.device_get(state["cursor"]))
-            todo = min(n_workers, TOTAL_CHUNKS - c)     # irregular batch
-            m_total = 0
-            for i in range(todo):
-                m_total += int(jax.device_get(align(state,
-                                                    reads_for_chunk(c + i))))
-            state = dict(state,
-                         cursor=state["cursor"] + todo,
-                         matched=state["matched"] + m_total,
-                         total=state["total"] + todo * CHUNK_READS)
-            return state, todo
+@app.step
+def step(mesh):
+    n_workers = max(mesh.devices.size - 2, 1)   # reader + writer reserved
+    sh = shardings(mesh)
 
-        return fn
+    @jax.jit
+    def align(state, reads):
+        pows = 4 ** jnp.arange(K)
+        windows = jnp.stack([reads[:, i:i + K]
+                             for i in range(READ_LEN - K + 1)], 1)
+        ids = jnp.sum(windows * pows, -1)            # (reads, windows)
+        hits = state["table"][ids] > 0
+        return jnp.sum(jnp.any(hits, axis=1))
+
+    def fn(state, step_i):
+        state = jax.device_put(state, sh)
+        c = int(jax.device_get(state["cursor"]))
+        todo = min(n_workers, TOTAL_CHUNKS - c)     # irregular batch
+        m_total = 0
+        for i in range(todo):
+            m_total += int(jax.device_get(align(state,
+                                                reads_for_chunk(c + i))))
+        state = dict(state,
+                     cursor=state["cursor"] + todo,
+                     matched=state["matched"] + m_total,
+                     total=state["total"] + todo * CHUNK_READS)
+        return state, todo
+
+    return fn
 
 
 def main():
-    app = AlignerApp()
-    params = MalleabilityParams(min_procs=3, max_procs=8, preferred=6)
-    runner = MalleableRunner(app, params, ScriptedRMS({2: 8, 4: 3}),
-                             redistribute=app.redistribute)
+    params = dmr.set_parameters(3, 8, 6)
+    runner = dmr.MalleableRunner(app, params, dmr.connect({2: 8, 4: 3}))
     state = runner.init()
-    step = 0
+    i = 0
     while int(jax.device_get(state["cursor"])) < TOTAL_CHUNKS:
-        state = runner.maybe_reconfig(state, step)
-        state, done = runner.step(state, step)
-        print(f"step {step}: workers {runner.current} processed {done} chunks "
+        state = dmr.reconfig(runner, state, i)
+        state, done = runner.step(state, i)
+        print(f"step {i}: workers {runner.current} processed {done} chunks "
               f"(cursor {int(jax.device_get(state['cursor']))}/{TOTAL_CHUNKS})")
-        step += 1
+        i += 1
     s = jax.device_get(state)
     print(f"matched {int(s['matched'])}/{int(s['total'])} reads; resizes "
           f"{[(e.step, e.from_procs, e.to_procs) for e in runner.events]}")
+    for e in runner.events:
+        pat = {k: v.bytes_moved for k, v in e.per_pattern.items()}
+        print(f"  resize @{e.step} pattern bytes: {pat}")
     assert int(s["total"]) == TOTAL_CHUNKS * CHUNK_READS
     print("OK — irregular pipeline drained across resizes")
 

@@ -3,7 +3,9 @@
 The solver state (A row-blocks, x, r, p) lives block-distributed over the
 job's mesh; a resize redistributes the row blocks with the *default* 1-D
 pattern (paper Fig. 2) and the iteration continues bit-where-it-left-off.
-Convergence is checked against a direct solve at the end.
+The user code is three plain functions bound to a `dmr.App` — the paper's
+minimalist integration surface.  Convergence is checked against a direct
+solve at the end.
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 python examples/cg_solver.py
 """
@@ -15,13 +17,14 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import warnings
 
 warnings.filterwarnings("ignore")
+warnings.filterwarnings("error", message=r".*repro\.dmr.*")
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
+import repro.dmr as dmr
 
 N = 512
 SEED = 0
@@ -35,60 +38,63 @@ def make_problem():
     return a, b
 
 
-class CGApp:
-    """MalleableApp: one CG iteration per step; A rows block-distributed."""
+app = dmr.App(name="cg")                 # one CG iteration per step
 
-    def state_shardings(self, mesh):
-        row = NamedSharding(mesh, P("data", None))
-        vec = NamedSharding(mesh, P())
-        return {"A": row, "x": vec, "r": vec, "p": vec, "rs": vec}
 
-    def init_state(self, mesh):
-        a, b = make_problem()
-        sh = self.state_shardings(mesh)
-        a = jax.device_put(a, sh["A"])
-        b = jax.device_put(b, sh["r"])
-        x = jnp.zeros(N)
-        return {"A": a, "x": x, "r": b, "p": b,
-                "rs": jnp.vdot(b, b)}
+@app.shardings
+def shardings(mesh):
+    row = NamedSharding(mesh, P("data", None))
+    vec = NamedSharding(mesh, P())
+    return {"A": row, "x": vec, "r": vec, "p": vec, "rs": vec}
 
-    def make_step(self, mesh):
-        sh = self.state_shardings(mesh)
 
-        @jax.jit
-        def cg_iter(state, _step):
-            A, x, r, p, rs = (state["A"], state["x"], state["r"],
-                              state["p"], state["rs"])
-            q = A @ p                                  # row-block matvec
-            denom = jnp.vdot(p, q)
-            alpha = jnp.where(jnp.abs(denom) > 1e-30, rs / denom, 0.0)
-            x = x + alpha * p
-            r = r - alpha * q
-            rs_new = jnp.vdot(r, r)
-            beta = jnp.where(rs > 1e-30, rs_new / rs, 0.0)
-            p = r + beta * p
-            new = {"A": A, "x": x, "r": r, "p": p, "rs": rs_new}
-            return new, jnp.sqrt(rs_new)
+@app.init
+def init(mesh):
+    a, b = make_problem()
+    sh = shardings(mesh)
+    a = jax.device_put(a, sh["A"])
+    b = jax.device_put(b, sh["r"])
+    return {"A": a, "x": jnp.zeros(N), "r": b, "p": b,
+            "rs": jnp.vdot(b, b)}
 
-        def fn(state, step):
-            state = jax.device_put(state, sh)
-            return cg_iter(state, step)
 
-        return fn
+@app.step
+def step(mesh):
+    sh = shardings(mesh)
+
+    @jax.jit
+    def cg_iter(state, _step):
+        A, x, r, p, rs = (state["A"], state["x"], state["r"],
+                          state["p"], state["rs"])
+        q = A @ p                                  # row-block matvec
+        denom = jnp.vdot(p, q)
+        alpha = jnp.where(jnp.abs(denom) > 1e-30, rs / denom, 0.0)
+        x = x + alpha * p
+        r = r - alpha * q
+        rs_new = jnp.vdot(r, r)
+        beta = jnp.where(rs > 1e-30, rs_new / rs, 0.0)
+        p = r + beta * p
+        new = {"A": A, "x": x, "r": r, "p": p, "rs": rs_new}
+        return new, jnp.sqrt(rs_new)
+
+    def fn(state, step_i):
+        state = jax.device_put(state, sh)
+        return cg_iter(state, step_i)
+
+    return fn
 
 
 def main():
-    app = CGApp()
-    params = MalleabilityParams(min_procs=2, max_procs=8, preferred=4)
-    rms = ScriptedRMS({10: 8, 25: 2})                 # expand then shrink
-    runner = MalleableRunner(app, params, rms)
+    params = dmr.set_parameters(2, 8, 4)
+    rms = dmr.connect({10: 8, 25: 2})             # expand then shrink
+    runner = dmr.MalleableRunner(app, params, rms)
     state = runner.init()
     res = None
-    for step in range(40):
-        state = runner.maybe_reconfig(state, step)
-        state, res = runner.step(state, step)
-        if step % 5 == 0:
-            print(f"iter {step:3d} workers {runner.current}  "
+    for i in range(40):
+        state = dmr.reconfig(runner, state, i)
+        state, res = runner.step(state, i)
+        if i % 5 == 0:
+            print(f"iter {i:3d} workers {runner.current}  "
                   f"residual {float(res):.3e}")
 
     a, b = make_problem()

@@ -13,13 +13,14 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import warnings
 
 warnings.filterwarnings("ignore")
+warnings.filterwarnings("error", message=r".*repro\.dmr.*")
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
+import repro.dmr as dmr
 
 N = 512
 
@@ -32,45 +33,51 @@ def make_problem():
     return a, b
 
 
-class JacobiApp:
-    def state_shardings(self, mesh):
-        row = NamedSharding(mesh, P("data", None))
-        vec = NamedSharding(mesh, P())
-        return {"A": row, "b": vec, "x": vec}
+app = dmr.App(name="jacobi")
 
-    def init_state(self, mesh):
-        a, b = make_problem()
-        sh = self.state_shardings(mesh)
-        return {"A": jax.device_put(a, sh["A"]),
-                "b": jax.device_put(b, sh["b"]), "x": jnp.zeros(N)}
 
-    def make_step(self, mesh):
-        sh = self.state_shardings(mesh)
+@app.shardings
+def shardings(mesh):
+    row = NamedSharding(mesh, P("data", None))
+    vec = NamedSharding(mesh, P())
+    return {"A": row, "b": vec, "x": vec}
 
-        @jax.jit
-        def it(state, _):
-            A, b, x = state["A"], state["b"], state["x"]
-            d = jnp.diag(A)
-            r = b - A @ x + d * x
-            x_new = r / d
-            return dict(state, x=x_new), jnp.max(jnp.abs(x_new - x))
 
-        def fn(state, step):
-            return it(jax.device_put(state, sh), step)
+@app.init
+def init(mesh):
+    a, b = make_problem()
+    sh = shardings(mesh)
+    return {"A": jax.device_put(a, sh["A"]),
+            "b": jax.device_put(b, sh["b"]), "x": jnp.zeros(N)}
 
-        return fn
+
+@app.step
+def step(mesh):
+    sh = shardings(mesh)
+
+    @jax.jit
+    def it(state, _):
+        A, b, x = state["A"], state["b"], state["x"]
+        d = jnp.diag(A)
+        r = b - A @ x + d * x
+        x_new = r / d
+        return dict(state, x=x_new), jnp.max(jnp.abs(x_new - x))
+
+    def fn(state, step_i):
+        return it(jax.device_put(state, sh), step_i)
+
+    return fn
 
 
 def main():
-    app = JacobiApp()
-    runner = MalleableRunner(app, MalleabilityParams(2, 8, 4),
-                             ScriptedRMS({8: 8, 20: 2}))
+    runner = dmr.MalleableRunner(app, dmr.set_parameters(2, 8, 4),
+                                 dmr.connect({8: 8, 20: 2}))
     state = runner.init()
-    for step in range(60):
-        state = runner.maybe_reconfig(state, step)
-        state, delta = runner.step(state, step)
-        if step % 10 == 0:
-            print(f"iter {step:3d} workers {runner.current} "
+    for i in range(60):
+        state = dmr.reconfig(runner, state, i)
+        state, delta = runner.step(state, i)
+        if i % 10 == 0:
+            print(f"iter {i:3d} workers {runner.current} "
                   f"delta {float(delta):.3e}")
     a, b = make_problem()
     err = float(np.max(np.abs(np.asarray(state["x"]) - np.linalg.solve(a, b))))

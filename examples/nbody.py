@@ -15,13 +15,14 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import warnings
 
 warnings.filterwarnings("ignore")
+warnings.filterwarnings("error", message=r".*repro\.dmr.*")
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
+import repro.dmr as dmr
 
 N = 2048
 DT = 1e-3
@@ -47,45 +48,50 @@ def energy(p):
     return ke + pe
 
 
-class NBodyApp:
-    def state_shardings(self, mesh):
-        part = NamedSharding(mesh, P("data"))
-        part2 = NamedSharding(mesh, P("data", None))
-        return {"pos": part2, "vel": part2, "mass": part, "weight": part}
+app = dmr.App(name="nbody")
 
-    def init_state(self, mesh):
-        return jax.device_put(init_particles(), self.state_shardings(mesh))
 
-    def make_step(self, mesh):
-        sh = self.state_shardings(mesh)
+@app.shardings
+def shardings(mesh):
+    part = NamedSharding(mesh, P("data"))
+    part2 = NamedSharding(mesh, P("data", None))
+    return {"pos": part2, "vel": part2, "mass": part, "weight": part}
 
-        @jax.jit
-        def step_fn(state, _):
-            pos, vel, mass = state["pos"], state["vel"], state["mass"]
-            diff = pos[:, None, :] - pos[None, :, :]
-            r2 = jnp.sum(diff * diff, -1) + EPS ** 2
-            inv_r3 = r2 ** -1.5
-            acc = -jnp.sum(diff * (mass[None, :, None] * inv_r3[..., None]),
-                           axis=1)
-            vel = vel + DT * acc
-            pos = pos + DT * vel
-            return dict(state, pos=pos, vel=vel), jnp.float32(0)
 
-        def fn(state, step):
-            return step_fn(jax.device_put(state, sh), step)
+@app.init
+def init(mesh):
+    return jax.device_put(init_particles(), shardings(mesh))
 
-        return fn
+
+@app.step
+def step(mesh):
+    sh = shardings(mesh)
+
+    @jax.jit
+    def step_fn(state, _):
+        pos, vel, mass = state["pos"], state["vel"], state["mass"]
+        diff = pos[:, None, :] - pos[None, :, :]
+        r2 = jnp.sum(diff * diff, -1) + EPS ** 2
+        inv_r3 = r2 ** -1.5
+        acc = -jnp.sum(diff * (mass[None, :, None] * inv_r3[..., None]),
+                       axis=1)
+        vel2 = vel + DT * acc
+        return dict(state, pos=pos + DT * vel2, vel=vel2), jnp.float32(0)
+
+    def fn(state, step_i):
+        return step_fn(jax.device_put(state, sh), step_i)
+
+    return fn
 
 
 def main():
-    app = NBodyApp()
-    runner = MalleableRunner(app, MalleabilityParams(1, 8, 4),
-                             ScriptedRMS({5: 8, 12: 1}))
+    runner = dmr.MalleableRunner(app, dmr.set_parameters(1, 8, 4),
+                                 dmr.connect({5: 8, 12: 1}))
     state = runner.init()
     e0 = energy(jax.device_get(state))
-    for step in range(20):
-        state = runner.maybe_reconfig(state, step)
-        state, _ = runner.step(state, step)
+    for i in range(20):
+        state = dmr.reconfig(runner, state, i)
+        state, _ = runner.step(state, i)
     e1 = energy(jax.device_get(state))
     drift = abs(e1 - e0) / abs(e0)
     print(f"energy {e0:.4f} -> {e1:.4f} (drift {drift:.2%}) across resizes "

@@ -2,7 +2,7 @@
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 python examples/quickstart.py
 
-The loop below is the paper's Listing 2, in JAX: one `maybe_reconfig` call at
+The loop below is the paper's Listing 2, in JAX: one `dmr.reconfig` call at
 the top of each iteration is the DMR_RECONFIG point; everything else —
 resource negotiation with the RMS, state redistribution, executable swap —
 happens inside the library.
@@ -15,25 +15,27 @@ if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 import warnings
 
 warnings.filterwarnings("ignore")
+# examples must be deprecation-clean: any in-repo pre-facade call dies here
+warnings.filterwarnings("error", message=r".*repro\.dmr.*")
 
 import jax
 
+import repro.dmr as dmr
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
-from repro.core.lm_app import LMTrainApp
+from repro.core.lm_app import lm_train_app
 
 cfg = get_config("granite-3-2b-smoke")                  # tiny dense LM
 shape = ShapeConfig("quickstart", "train", seq_len=64, global_batch=8)
 
-app = LMTrainApp(cfg, shape)                            # the "user code"
-params = MalleabilityParams(min_procs=2, max_procs=8, preferred=4)
-rms = ScriptedRMS({4: 8, 10: 2})                        # expand @4, shrink @10
+app = lm_train_app(cfg, shape)                          # the "user code"
+params = dmr.set_parameters(2, 8, 4)                    # DMR_Set_parameters
+rms = dmr.connect({4: 8, 10: 2})                        # expand @4, shrink @10
 
-runner = MalleableRunner(app, params, rms)
+runner = dmr.MalleableRunner(app, params, rms)
 state = runner.init()
 for step in range(14):
-    state = runner.maybe_reconfig(state, step)          # <- DMR_RECONFIG
+    state = dmr.reconfig(runner, state, step)           # <- DMR_RECONFIG
     state, metrics = runner.step(state, step)
     print(f"step {step:3d} workers {runner.current}  "
           f"loss {float(jax.device_get(metrics['loss'])):.4f}")

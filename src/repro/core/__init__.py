@@ -1,11 +1,16 @@
-"""The paper's primary contribution: DMRlib malleability, in JAX.
+"""Core building blocks + deprecation shims for the pre-facade API.
 
-api.py          MalleableRunner / dmr_reconfig (DMR_RECONFIG, Algorithm 1)
-params.py       MalleabilityParams (min/max/pref + inhibitors, §3.2)
-policy.py       Algorithm 2 resize policy (§5.1)
-redistribute.py default + block-cyclic patterns, pytree resharding (§3.4)
-rms_client.py   runner <-> RMS channel (Scripted / Policy / File)
-lm_app.py       LM-training MalleableApp over the model zoo
+The user-facing surface is ``repro.dmr`` (runner, App spec, named
+redistribution patterns, RMS connectors, co-simulation); see docs/api.md
+for the paper-call -> API table and the migration guide.  This package
+keeps the canonical low-level pieces and the backward-compatible aliases:
+
+params.py       MalleabilityParams (min/max/pref + inhibitors, §3.2) [canonical]
+policy.py       Algorithm 2 + the pluggable policy framework (§5.1) [canonical]
+redistribute.py host-level Table-1 primitives, pytree resharding [canonical]
+api.py          MalleableRunner / dmr_reconfig [deprecated -> repro.dmr]
+rms_client.py   Scripted/Policy/File RMS [deprecated -> repro.dmr.connectors]
+lm_app.py       lm_train_app (dmr.App) + deprecated LMTrainApp class
 """
 from repro.core.api import MalleableApp, MalleableRunner, ResizeEvent, dmr_reconfig
 from repro.core.params import (MalleabilityParams, expansion_target,

@@ -1,169 +1,46 @@
-"""MalleableRunner — the DMR_RECONFIG trigger for JAX jobs (paper §3.1/§3.3).
+"""Deprecation shims for the pre-facade runner API.
 
-Paper (Listing 2):
-
-    for (i = step; i < TOTAL_STEPS; i++) {
-        DMR_RECONFIG(compute(...), send_expand(...), recv_expand(...),
-                     send_shrink(...), recv_shrink(...));
-        /* computation */
-    }
-
-Ours:
-
-    runner = MalleableRunner(app, params, rms)
-    state = runner.init()
-    for step in range(start, total):
-        state = runner.maybe_reconfig(state, step)   # <- the DMR_RECONFIG point
-        state, out = runner.step(state, step)
-
-``maybe_reconfig`` implements Algorithm 1 under a single controller: query the
-RMS (honoring the §3.2 inhibitors), and on a resize build the new submesh,
-redistribute the full state pytree (in-memory, §2.2 — never through disk),
-swap in the executable for the new mesh, and continue at the same iteration.
-The parent/child process handoff of the paper degenerates to an executable
-swap: "parents terminate" == the old mesh's executable is dropped.
+The implementation moved to ``repro.dmr`` (the single user-facing API —
+runner, named redistribution patterns, RMS connectors, co-simulation).
+``repro.core.MalleableRunner`` / ``dmr_reconfig`` keep working for old
+callers but emit a ``DeprecationWarning`` pointing at ``repro.dmr``.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Callable, Dict, List, Optional, Protocol
-
-import jax
+import warnings
+from typing import Callable, List, Optional
 
 from repro.core.params import MalleabilityParams
-from repro.core.policy import Action, ClusterView, Policy, get_policy
-from repro.core.redistribute import TransferStats, redistribute_state
-from repro.core.rms_client import PolicyRMS, RMSClient
-from repro.parallel.mesh import make_job_mesh
+from repro.dmr.app import MalleableApp                       # noqa: F401
+from repro.dmr.runner import ResizeEvent                     # noqa: F401
+from repro.dmr.runner import MalleableRunner as _Runner
+from repro.parallel.mesh import make_job_mesh                # noqa: F401
 
 
-class MalleableApp(Protocol):
-    """What a job must provide to become malleable (the paper's user code)."""
-
-    def init_state(self, mesh) -> Any: ...
-    def state_shardings(self, mesh) -> Any: ...
-    def make_step(self, mesh) -> Callable[[Any, int], Any]: ...
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} (repro.dmr facade)",
+                  DeprecationWarning, stacklevel=3)
 
 
-@dataclasses.dataclass
-class ResizeEvent:
-    step: int
-    action: str
-    from_procs: int
-    to_procs: int
-    transfer: TransferStats
-    recompile_s: float
+class MalleableRunner(_Runner):
+    """Deprecated alias — use ``repro.dmr.MalleableRunner``.
 
+    Keeps the pre-facade positional signature (``devices`` and
+    ``redistribute`` were positional once)."""
 
-class MalleableRunner:
-    def __init__(self, app: MalleableApp, params: MalleabilityParams,
-                 rms: Optional[RMSClient] = None,
+    def __init__(self, app, params: MalleabilityParams, rms=None,
                  devices: Optional[List] = None,
                  redistribute: Optional[Callable] = None,
-                 max_model_axis: int = 16,
-                 policy=None,
-                 cluster_view: Optional[Callable[[], ClusterView]] = None):
-        self.app = app
-        self.params = params
-        self.devices = list(devices) if devices is not None else jax.devices()
-        assert len(self.devices) >= params.max_procs, (
-            f"need {params.max_procs} workers, have {len(self.devices)}")
-        self.redistribute = redistribute or (
-            lambda state, shardings: redistribute_state(state, shardings))
-        self.max_model_axis = max_model_axis
-        self.current = params.preferred
-        if rms is None:
-            # policy selection: run a named/custom Policy locally against a
-            # cluster view (default: this runner owns every local device and
-            # there is no queue — the single-tenant standalone case).
-            view = cluster_view or (lambda: ClusterView(
-                available=len(self.devices) - self.current,
-                pending_min_sizes=[]))
-            rms = PolicyRMS(view, policy=get_policy(policy))
-        elif policy is not None or cluster_view is not None:
-            raise ValueError(
-                "pass either rms= or policy=/cluster_view=, not both")
-        self.rms = rms
-        self.mesh = self._mesh_for(self.current)
-        self._step_cache: Dict[int, Callable] = {}
-        self.events: List[ResizeEvent] = []
-        self._last_query_step = -10 ** 9
-        self._last_query_time = 0.0
-
-    # ------------------------------------------------------------------
-    def _mesh_for(self, n: int):
-        return make_job_mesh(self.devices[:n], max_model=self.max_model_axis)
-
-    def _step_fn(self, n: int) -> Callable:
-        if n not in self._step_cache:
-            self._step_cache[n] = self.app.make_step(self._mesh_for(n))
-        return self._step_cache[n]
-
-    def init(self) -> Any:
-        return self.app.init_state(self.mesh)
-
-    def prewarm(self, sizes: Optional[List[int]] = None):
-        """AOT-compile candidate meshes (min/pref/max by default) so a later
-        resize costs only the state transfer — the TPU analogue of hiding
-        MPI_Comm_spawn latency (DESIGN.md §6). Returns seconds spent."""
-        t0 = time.perf_counter()
-        for n in sizes or [self.params.min_procs, self.params.preferred,
-                           self.params.max_procs]:
-            self._step_fn(self.params.clamp(n))
-        return time.perf_counter() - t0
-
-    # ------------------------------------------------------------------
-    def maybe_reconfig(self, state, step: int):
-        """Algorithm 1: check role/inhibitors, query RMS, resize if told to."""
-        p = self.params
-        if step - self._last_query_step < max(p.sched_iterations, 1):
-            return state
-        if p.sched_period_s and \
-                time.monotonic() - self._last_query_time < p.sched_period_s:
-            return state
-        self._last_query_step = step
-        self._last_query_time = time.monotonic()
-
-        action = self.rms.query(step=step, current=self.current, params=p)
-        if action.kind == "none" or action.target == self.current:
-            return state
-        return self.apply_resize(state, step, action)
-
-    def apply_resize(self, state, step: int, action: Action):
-        """Expand/shrink to action.target: reshard state, swap executable."""
-        target = self.params.clamp(action.target)
-        new_mesh = self._mesh_for(target)
-        new_shardings = self.app.state_shardings(new_mesh)
-        state, stats = self.redistribute(state, new_shardings)
-        t0 = time.perf_counter()
-        self._step_fn(target)          # compile (cached across resizes)
-        recompile = time.perf_counter() - t0
-        self.events.append(ResizeEvent(
-            step=step, action=action.kind, from_procs=self.current,
-            to_procs=target, transfer=stats, recompile_s=recompile))
-        self.current = target
-        self.mesh = new_mesh
-        return state
-
-    # ------------------------------------------------------------------
-    def step(self, state, step: int, *args):
-        return self._step_fn(self.current)(state, step, *args)
-
-    # fault tolerance: forced shrink onto survivors (DESIGN.md §6)
-    def handle_failure(self, state, step: int, failed_devices) -> Any:
-        failed = {d.id for d in failed_devices}
-        survivors = [d for d in self.devices if d.id not in failed]
-        self.devices = survivors
-        # legal size at or below the survivor count
-        sizes = [s for s in self.params.legal_sizes() if s <= len(survivors)]
-        if not sizes:
-            raise RuntimeError("not enough survivors to continue; restart "
-                               "from checkpoint (on-disk C/R path)")
-        self._step_cache.clear()
-        return self.apply_resize(state, step, Action("shrink", max(sizes)))
+                 max_model_axis: int = 16, policy=None,
+                 cluster_view=None):
+        _deprecated("repro.core.MalleableRunner", "repro.dmr.MalleableRunner")
+        super().__init__(app, params, rms, devices=devices,
+                         redistribute=redistribute,
+                         max_model_axis=max_model_axis, policy=policy,
+                         cluster_view=cluster_view)
 
 
-def dmr_reconfig(runner: MalleableRunner, state, step: int):
-    """Functional one-liner mirroring the DMR_RECONFIG macro."""
+def dmr_reconfig(runner, state, step: int):
+    """Deprecated alias — use ``repro.dmr.reconfig``."""
+    _deprecated("repro.core.dmr_reconfig", "repro.dmr.reconfig")
     return runner.maybe_reconfig(state, step)

@@ -1,14 +1,17 @@
-"""LM pretraining as a MalleableApp — the paper's technique integrated as a
+"""LM pretraining as a ``dmr.App`` — the paper's technique integrated as a
 first-class feature of the training framework.
 
-A training job binds (ArchConfig, shape, optimizer) and becomes elastically
-resizable between any legal worker counts: the full TrainState (params, AdamW
-moments, step, RNG, data cursor) is redistributed in-memory on every resize
-and the per-mesh executable is swapped. Bit-exact continuation is covered by
-tests/test_elastic.py.
+``lm_train_app`` binds (ArchConfig, shape, optimizer) into a ``repro.dmr``
+App: the job becomes elastically resizable between any legal worker counts —
+the full TrainState (params, AdamW moments, step, RNG, data cursor) is
+redistributed in-memory on every resize and the per-mesh executable is
+swapped.  Bit-exact continuation is covered by tests/test_elastic.py.
+
+``LMTrainApp`` is the pre-facade class form, kept as a deprecation shim.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -16,15 +19,17 @@ import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.data.pipeline import SyntheticDataset
-from repro.models.train import (TrainState, abstract_state, init_state,
-                                make_train_step)
+from repro.dmr.app import App
+from repro.models.train import TrainState, init_state, make_train_step
 from repro.optim.adamw import AdamW
 from repro.parallel.context import sharding_context
 from repro.parallel.sharding import (batch_shardings, rules_for,
                                      state_shardings)
 
 
-class LMTrainApp:
+class _LMTrainImpl:
+    """The three user functions of the paper, for an LM training job."""
+
     def __init__(self, cfg: ArchConfig, shape: ShapeConfig,
                  optimizer: Optional[AdamW] = None, seed: int = 0,
                  global_batch: Optional[int] = None):
@@ -72,3 +77,24 @@ class LMTrainApp:
                 return jitted(state, batch)
 
         return fn
+
+
+def lm_train_app(cfg: ArchConfig, shape: ShapeConfig,
+                 optimizer: Optional[AdamW] = None, seed: int = 0,
+                 global_batch: Optional[int] = None) -> App:
+    """LM pretraining as a ``repro.dmr.App`` (the facade form)."""
+    impl = _LMTrainImpl(cfg, shape, optimizer, seed, global_batch)
+    app = App(init=impl.init_state, shardings=impl.state_shardings,
+              step=impl.make_step, name=f"lm:{cfg.name}")
+    app.dataset = impl.dataset           # exposed for data-pipeline callers
+    return app
+
+
+class LMTrainApp(_LMTrainImpl):
+    """Deprecated alias — use ``lm_train_app`` (returns a ``dmr.App``)."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn("repro.core.lm_app.LMTrainApp is deprecated; use "
+                      "lm_train_app(...) (repro.dmr facade)",
+                      DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)

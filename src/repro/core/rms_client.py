@@ -1,77 +1,35 @@
-"""Runner <-> RMS communication channel (the DMRlib <-> Slurm link, Fig. 1).
+"""Deprecation shims for the pre-facade RMS clients.
 
-Implementations:
-  * ScriptedRMS  — deterministic action schedule (tests, examples).
-  * PolicyRMS    — evaluates a pluggable Policy (Algorithm 2 by default)
-                   against a live ClusterView provider.
-  * FileRMS      — watches a JSON file for operator-issued resize commands
-                   (the single-host stand-in for the Slurm RPC socket; used by
-                   the elastic training demo).
-  * SimJobHandle — adapter used inside the discrete-event simulator.
+The implementations moved to ``repro.dmr.connectors`` (plus the new
+co-simulation connector ``repro.dmr.SimRMS``).  These aliases keep old
+imports working but emit a ``DeprecationWarning`` pointing at ``repro.dmr``.
 """
 from __future__ import annotations
 
-import json
-import os
-from typing import Callable, Dict, Optional, Protocol
+import warnings
 
-from repro.core.params import MalleabilityParams
-from repro.core.policy import Action, ClusterView, Policy, get_policy
+from repro.dmr.connectors import RMSConnector as RMSClient   # noqa: F401
+from repro.dmr import connectors as _impl
 
 
-class RMSClient(Protocol):
-    def query(self, *, step: int, current: int,
-              params: MalleabilityParams) -> Action: ...
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} (repro.dmr facade)",
+                  DeprecationWarning, stacklevel=3)
 
 
-class ScriptedRMS:
-    """Fixed {step: target_size} schedule."""
-
-    def __init__(self, schedule: Dict[int, int]):
-        self.schedule = dict(schedule)
-
-    def query(self, *, step: int, current: int,
-              params: MalleabilityParams) -> Action:
-        tgt = self.schedule.get(step)
-        if tgt is None or tgt == current:
-            return Action.none(current)
-        tgt = params.clamp(tgt)
-        return Action("expand" if tgt > current else "shrink", tgt)
+class ScriptedRMS(_impl.ScriptedRMS):
+    def __init__(self, schedule):
+        _deprecated("repro.core.ScriptedRMS", "repro.dmr.ScriptedRMS")
+        super().__init__(schedule)
 
 
-class PolicyRMS:
-    """A malleability policy against a caller-supplied cluster view.
-
-    ``policy`` is any ``repro.core.policy.Policy`` instance or registry name
-    ("algorithm2" — the default — "energy", "throughput", ...)."""
-
-    def __init__(self, view_fn: Callable[[], ClusterView], policy=None):
-        self.view_fn = view_fn
-        self.policy: Policy = get_policy(policy)
-
-    def query(self, *, step: int, current: int,
-              params: MalleabilityParams) -> Action:
-        return self.policy.decide(current, params, self.view_fn())
+class PolicyRMS(_impl.PolicyRMS):
+    def __init__(self, view_fn, policy=None):
+        _deprecated("repro.core.PolicyRMS", "repro.dmr.PolicyRMS")
+        super().__init__(view_fn, policy=policy)
 
 
-class FileRMS:
-    """Reads {"target": N} from a JSON file when its mtime changes."""
-
-    def __init__(self, path: str):
-        self.path = path
-        self._mtime = 0.0
-
-    def query(self, *, step: int, current: int,
-              params: MalleabilityParams) -> Action:
-        try:
-            mtime = os.stat(self.path).st_mtime
-        except FileNotFoundError:
-            return Action.none(current)
-        if mtime <= self._mtime:
-            return Action.none(current)
-        self._mtime = mtime
-        with open(self.path) as f:
-            tgt = params.clamp(int(json.load(f).get("target", current)))
-        if tgt == current:
-            return Action.none(current)
-        return Action("expand" if tgt > current else "shrink", tgt)
+class FileRMS(_impl.FileRMS):
+    def __init__(self, path):
+        _deprecated("repro.core.FileRMS", "repro.dmr.FileRMS")
+        super().__init__(path)

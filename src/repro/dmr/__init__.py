@@ -1,0 +1,56 @@
+"""``repro.dmr`` — the DMRlib user-facing API, one surface for every mode.
+
+The paper's minimalist MPI-like call set, mapped one-to-one (docs/api.md):
+
+    DMR_Set_parameters(min, max, pref)   dmr.set_parameters(2, 8, 4)
+    user compute/layout functions        dmr.App(init=, shardings=, step=)
+    DMR_RECONFIG(...)                    dmr.reconfig(runner, state, i)
+    Table-1 patterns                     dmr.get_pattern("blockcyclic:4"),
+                                         App(patterns={"table": "replicate"})
+    DMRlib <-> Slurm link (Fig. 1)       dmr.connect(...) / RMSConnector:
+                                         ScriptedRMS, PolicyRMS, FileRMS,
+                                         SimRMS (co-simulation)
+
+One app definition runs live (PolicyRMS/FileRMS), scripted (ScriptedRMS),
+or inside a simulated cluster (SimRMS) without changing a line of user
+code.  ``repro.core`` re-exports this surface as deprecation shims for
+pre-facade callers.
+"""
+from repro.core.params import MalleabilityParams
+from repro.core.policy import Action, ClusterView, Policy, get_policy
+from repro.core.redistribute import TransferStats
+from repro.dmr.app import App, MalleableApp, ensure_app
+from repro.dmr.connectors import (FileRMS, PolicyRMS, RMSConnector,
+                                  ScriptedRMS, connect)
+from repro.dmr.cosim import SimRMS
+from repro.dmr.patterns import (PATTERNS, BlockCyclicPattern, CallablePattern,
+                                DefaultPattern, Pattern, ReplicatePattern,
+                                ResizeContext, get_pattern, redistribute_tree,
+                                register_pattern)
+from repro.dmr.runner import MalleableRunner, ResizeEvent, reconfig
+
+
+def set_parameters(min_procs: int, max_procs: int, preferred: int, *,
+                   sched_period_s: float = 0.0,
+                   sched_iterations: int = 0) -> MalleabilityParams:
+    """``DMR_Set_parameters(min, max, pref)`` + the §3.2 inhibitors."""
+    return MalleabilityParams(min_procs=min_procs, max_procs=max_procs,
+                              preferred=preferred,
+                              sched_period_s=sched_period_s,
+                              sched_iterations=sched_iterations)
+
+
+__all__ = [
+    # paper call set
+    "App", "set_parameters", "reconfig", "MalleableRunner",
+    # patterns
+    "Pattern", "DefaultPattern", "BlockCyclicPattern", "ReplicatePattern",
+    "CallablePattern", "ResizeContext", "PATTERNS", "get_pattern",
+    "register_pattern", "redistribute_tree",
+    # connectors
+    "RMSConnector", "ScriptedRMS", "PolicyRMS", "FileRMS", "SimRMS",
+    "connect",
+    # shared types
+    "MalleableApp", "ensure_app", "MalleabilityParams", "Action",
+    "ClusterView", "Policy", "get_policy", "TransferStats", "ResizeEvent",
+]

@@ -1,0 +1,124 @@
+"""RMS connectors — one protocol between a running job and its RMS.
+
+The paper's Fig. 1 link between DMRlib and Slurm, generalized: every way a
+runner can receive resize decisions implements :class:`RMSConnector` —
+
+  * :class:`ScriptedRMS`  — deterministic ``{step: target}`` schedule
+    (tests, examples, benchmark replays);
+  * :class:`PolicyRMS`    — a pluggable ``repro.core.policy.Policy``
+    evaluated against a live cluster view (the standalone/Algorithm-2 case);
+  * :class:`FileRMS`      — operator-issued resize commands via a watched
+    JSON file (the single-host stand-in for the Slurm RPC socket);
+  * ``repro.dmr.cosim.SimRMS`` — co-simulation: decisions come from a job
+    embedded in the discrete-event cluster simulator.
+
+``connect`` is the convenience factory the examples use: a dict becomes a
+``ScriptedRMS``, ``"file:<path>"`` a ``FileRMS``, and any RMSConnector
+passes through.  For policy-driven resizes pass ``rms=None`` plus
+``policy="<name>"`` to the runner — it builds the ``PolicyRMS`` itself
+(it owns the cluster view).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict, Optional, Protocol, Union, runtime_checkable
+
+from repro.core.params import MalleabilityParams
+from repro.core.policy import Action, ClusterView, Policy, get_policy
+
+
+@runtime_checkable
+class RMSConnector(Protocol):
+    """The runner <-> RMS channel: one query per DMR_RECONFIG point."""
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action: ...
+
+
+class ScriptedRMS:
+    """Fixed ``{step: target_size}`` schedule."""
+
+    def __init__(self, schedule: Dict[int, int]):
+        self.schedule = dict(schedule)
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action:
+        tgt = self.schedule.get(step)
+        if tgt is None or tgt == current:
+            return Action.none(current)
+        tgt = params.clamp(tgt)
+        if tgt == current:
+            return Action.none(current)
+        return Action("expand" if tgt > current else "shrink", tgt)
+
+
+class PolicyRMS:
+    """A malleability policy against a caller-supplied cluster view.
+
+    ``policy`` is any ``repro.core.policy.Policy`` instance or registry name
+    ("algorithm2" — the default — "energy", "throughput", ...)."""
+
+    def __init__(self, view_fn: Callable[[], ClusterView], policy=None):
+        self.view_fn = view_fn
+        self.policy: Policy = get_policy(policy)
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action:
+        return self.policy.decide(current, params, self.view_fn())
+
+
+class FileRMS:
+    """Reads ``{"target": N}`` from a JSON file when its mtime changes.
+
+    Malformed or mid-write files are treated as "no decision yet"
+    (``Action.none``): the mtime watermark only advances once a file parses,
+    so a command written non-atomically is picked up on a later query
+    instead of crashing the training loop.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._mtime = 0.0
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action:
+        try:
+            mtime = os.stat(self.path).st_mtime
+        except FileNotFoundError:
+            return Action.none(current)
+        if mtime <= self._mtime:
+            return Action.none(current)
+        try:
+            with open(self.path) as f:
+                cmd = json.load(f)
+            tgt = params.clamp(int(cmd.get("target", current)))
+        except (OSError, ValueError, TypeError, AttributeError):
+            return Action.none(current)    # malformed / mid-write: retry
+        self._mtime = mtime
+        if tgt == current:
+            return Action.none(current)
+        return Action("expand" if tgt > current else "shrink", tgt)
+
+
+def connect(spec: Union[RMSConnector, Dict[int, int], str, None],
+            ) -> Optional[RMSConnector]:
+    """Resolve an RMS spec to a connector.
+
+    ``None`` means "let the runner evaluate a policy locally"; a dict is a
+    scripted schedule; ``"file:<path>"`` watches a command file; anything
+    with a ``query`` method passes through unchanged.
+    """
+    if spec is None:
+        return None
+    if isinstance(spec, dict):
+        return ScriptedRMS(spec)
+    if isinstance(spec, str):
+        kind, _, arg = spec.partition(":")
+        if kind == "file" and arg:
+            return FileRMS(arg)
+        raise ValueError(f"unknown RMS spec {spec!r}; expected 'file:<path>',"
+                         " a {{step: target}} dict, or an RMSConnector")
+    if isinstance(spec, RMSConnector):
+        return spec
+    raise TypeError(f"{spec!r} does not implement RMSConnector.query")

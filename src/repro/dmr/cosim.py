@@ -1,0 +1,155 @@
+"""Co-simulation: a live runner driven by the cluster simulator's decisions.
+
+``SimRMS`` embeds a job inside the event-indexed discrete-event simulator
+(``repro.rms.scheduler``) and exposes that job's policy-driven resizes as an
+``RMSConnector``: the simulator replays the whole cluster — queue, policy,
+inhibitors, every other job — and the designated job's resize records become
+the schedule a *real* ``dmr.MalleableRunner`` executes, mapped from simulated
+time onto the job's iteration axis via the job's synced work fraction.
+
+This closes the loop between the repo's two halves: the same policy that
+decides resizes in the workload studies now drives an actual JAX job, and
+``crosscheck`` verifies the runner's ``ResizeEvent`` trail against the
+simulator's ``resize_log`` record-for-record.
+
+    simrms = dmr.SimRMS(scenario="steady", n_jobs=16, jid=3,
+                        policy="algorithm2")
+    runner = dmr.MalleableRunner(app, params, simrms,
+                                 initial_procs=simrms.start_procs)
+    for i in range(simrms.total_steps):
+        state = dmr.reconfig(runner, state, i)
+        state, _ = runner.step(state, i)
+    simrms.crosscheck(runner.events)      # raises on any divergence
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.params import MalleabilityParams
+from repro.core.policy import Action
+
+
+class SimRMS:
+    """RMSConnector whose decisions come from a simulated cluster.
+
+    Pass explicit ``jobs`` (+ optional ``config``) or a scenario name
+    (``scenario="steady"`` / ``"bursty"`` / ``"trace:synthetic"`` / ...).
+    ``jid`` designates the tracked job; its profile's ``iterations`` set the
+    default step axis (``total_steps``) the simulated resize times are
+    mapped onto.  The full simulation runs eagerly at construction:
+    ``result`` / ``resize_log`` hold the cluster-wide outcome, ``schedule``
+    the tracked job's resizes as ``(due_step, Action, ResizeRecord)``
+    (due steps normalized to be strictly increasing so one query per step
+    can consume them all).
+
+    For an exact record-for-record replay the *runner's* params must not
+    suppress queries: keep ``sched_iterations <= 1`` and
+    ``sched_period_s == 0`` (inhibitor pacing is already modeled inside
+    the simulation) and drive at least ``total_steps`` iterations.
+    """
+
+    def __init__(self, jobs: Optional[List] = None, *,
+                 scenario: Optional[str] = None, n_jobs: int = 24,
+                 jid: int = 0, policy=None, config=None, engine=None,
+                 total_steps: Optional[int] = None, seed: int = 0,
+                 mode: str = "moldable", malleable: bool = True):
+        from repro.rms.scheduler import SimConfig, Simulator
+        from repro.rms.workload import make_scenario
+
+        overrides: Dict = {}
+        if jobs is None:
+            if scenario is None:
+                raise ValueError("SimRMS needs jobs= or scenario=")
+            jobs, overrides = make_scenario(scenario, n_jobs, mode=mode,
+                                            malleable=malleable, seed=seed)
+        cfg = config or SimConfig(**overrides)
+        by_id = {j.jid: j for j in jobs}
+        if jid not in by_id:
+            raise KeyError(f"no job {jid!r} in the workload; "
+                           f"jids: {sorted(by_id)[:10]}...")
+        self.job = by_id[jid]
+        if not self.job.malleable:
+            raise ValueError(f"job {jid} is not malleable — nothing to drive")
+        self.params: MalleabilityParams = self.job.app.params
+        self.total_steps = int(total_steps or self.job.app.iterations)
+
+        schedule: List[Tuple[int, Action, object]] = []
+
+        def _listener(rec, j):
+            if rec.jid != jid:
+                return
+            # j.remaining_work was synced to the resize instant by the
+            # engine; map the cluster-time decision onto the job's own
+            # iteration axis
+            frac = min(max(1.0 - j.remaining_work, 0.0), 1.0)
+            due = min(int(frac * self.total_steps), self.total_steps - 1)
+            schedule.append((due, Action(rec.kind, rec.to_procs), rec))
+
+        sim = (engine or Simulator)(jobs, cfg, policy=policy,
+                                    resize_listener=_listener)
+        self.result = sim.run()
+        self.resize_log = self.result.resize_log
+        self.schedule = self._normalize(schedule)
+        self._cursor = 0
+
+    def _normalize(self, schedule):
+        """Make every entry consumable: the runner issues at most one query
+        per step, so due steps must be strictly increasing and the k-th
+        entry from the end must leave k-1 later steps free.  Resizes that
+        map to the same iteration (or crowd the final steps) are spread
+        backward/forward without reordering."""
+        if len(schedule) > self.total_steps:
+            raise ValueError(
+                f"job {self.job.jid} resized {len(schedule)} times but has "
+                f"only {self.total_steps} steps; raise total_steps=")
+        out = list(schedule)
+        for k in range(len(out) - 1, -1, -1):      # leave room at the tail
+            cap = self.total_steps - (len(out) - k)
+            if out[k][0] > cap:
+                out[k] = (cap,) + out[k][1:]
+        for k in range(1, len(out)):               # strictly increasing
+            if out[k][0] <= out[k - 1][0]:
+                out[k] = (out[k - 1][0] + 1,) + out[k][1:]
+        return out
+
+    # ------------------------------------------------------------------
+    @property
+    def start_procs(self) -> int:
+        """Workers the scheduler started the tracked job with (a moldable
+        job starts with whatever was free, not necessarily its preferred)."""
+        if self.schedule:
+            return self.schedule[0][2].from_procs
+        return self.job.nprocs
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action:
+        if self._cursor >= len(self.schedule):
+            return Action.none(current)
+        due, act, _rec = self.schedule[self._cursor]
+        if step < due:
+            return Action.none(current)
+        self._cursor += 1
+        tgt = params.clamp(act.target)
+        if tgt == current:
+            return Action.none(current)
+        return Action("expand" if tgt > current else "shrink", tgt)
+
+    # ------------------------------------------------------------------
+    def expected_resizes(self) -> List[Tuple[str, int, int]]:
+        """The tracked job's resizes from the simulator's audit log."""
+        return [(r.kind, r.from_procs, r.to_procs)
+                for r in self.resize_log if r.jid == self.job.jid]
+
+    def crosscheck(self, events) -> List[Tuple[str, int, int]]:
+        """Verify a runner's ResizeEvent trail against ``resize_log``.
+
+        Raises ``ValueError`` on any divergence (missed, extra, or
+        re-ordered resizes); returns the matched ``(kind, from, to)`` list.
+        """
+        got = [(e.action, e.from_procs, e.to_procs) for e in events]
+        want = self.expected_resizes()
+        if got != want:
+            raise ValueError(
+                f"co-simulation divergence:\n  simulator resize_log: "
+                f"{want}\n  runner events:        {got}")
+        return got

@@ -1,0 +1,206 @@
+"""MalleableRunner — the DMR_RECONFIG trigger for JAX jobs (paper §3.1/§3.3).
+
+Paper (Listing 2):
+
+    for (i = step; i < TOTAL_STEPS; i++) {
+        DMR_RECONFIG(compute(...), send_expand(...), recv_expand(...),
+                     send_shrink(...), recv_shrink(...));
+        /* computation */
+    }
+
+Ours:
+
+    runner = dmr.MalleableRunner(app, params, rms)
+    state = runner.init()
+    for step in range(start, total):
+        state = dmr.reconfig(runner, state, step)   # <- the DMR_RECONFIG point
+        state, out = runner.step(state, step)
+
+``reconfig`` implements Algorithm 1 under a single controller: query the
+RMS (honoring the §3.2 inhibitors), and on a resize build the new submesh,
+redistribute the state pytree through the job's named redistribution
+patterns (in-memory, §2.2 — never through disk), swap in the executable for
+the new mesh, and continue at the same iteration.  The parent/child process
+handoff of the paper degenerates to an executable swap: "parents terminate"
+== the old mesh's executable is dropped.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core.params import MalleabilityParams
+from repro.core.policy import Action, ClusterView, get_policy
+from repro.core.redistribute import TransferStats
+from repro.dmr.app import MalleableApp, ensure_app
+from repro.dmr.connectors import PolicyRMS, RMSConnector, connect
+from repro.dmr.patterns import PatternSpec, redistribute_tree
+from repro.parallel.mesh import make_job_mesh
+
+
+@dataclasses.dataclass
+class ResizeEvent:
+    step: int
+    action: str                       # "expand" | "shrink" | "migrate"
+    from_procs: int
+    to_procs: int
+    transfer: TransferStats
+    recompile_s: float
+    #: TransferStats per named redistribution pattern (keyed by pattern
+    #: spec, e.g. "default" / "blockcyclic:4"); empty for a legacy
+    #: whole-tree custom redistribute callable.
+    per_pattern: Dict[str, TransferStats] = dataclasses.field(
+        default_factory=dict)
+
+
+class MalleableRunner:
+    """Algorithm 1 under a single controller.
+
+    ``app`` is a ``dmr.App`` or any MalleableApp-protocol object;
+    ``rms`` anything ``dmr.connect`` accepts (connector, ``{step: target}``
+    dict, ``"file:<path>"``); per-subtree redistribution ``patterns``
+    default to the app's own (``dmr.App(patterns=...)``).
+    """
+
+    def __init__(self, app: MalleableApp, params: MalleabilityParams,
+                 rms: Optional[RMSConnector] = None, *,
+                 devices: Optional[List] = None,
+                 patterns: Optional[Dict[str, PatternSpec]] = None,
+                 redistribute: Optional[Callable] = None,
+                 max_model_axis: int = 16,
+                 policy=None,
+                 cluster_view: Optional[Callable[[], ClusterView]] = None,
+                 initial_procs: Optional[int] = None):
+        self.app = ensure_app(app)
+        self.params = params
+        self.devices = list(devices) if devices is not None else jax.devices()
+        assert len(self.devices) >= params.max_procs, (
+            f"need {params.max_procs} workers, have {len(self.devices)}")
+        self.patterns = patterns if patterns is not None \
+            else getattr(self.app, "patterns", None)
+        self._custom_redistribute = redistribute
+        self.max_model_axis = max_model_axis
+        self.current = params.clamp(initial_procs) \
+            if initial_procs is not None else params.preferred
+        rms = connect(rms)
+        if rms is None:
+            # policy selection: run a named/custom Policy locally against a
+            # cluster view (default: this runner owns every local device and
+            # there is no queue — the single-tenant standalone case).
+            view = cluster_view or (lambda: ClusterView(
+                available=len(self.devices) - self.current,
+                pending_min_sizes=[]))
+            rms = PolicyRMS(view, policy=get_policy(policy))
+        elif policy is not None or cluster_view is not None:
+            raise ValueError(
+                "pass either rms= or policy=/cluster_view=, not both")
+        self.rms = rms
+        self.mesh = self._mesh_for(self.current)
+        self._step_cache: Dict[int, Callable] = {}
+        self.events: List[ResizeEvent] = []
+        self._last_query_step = -10 ** 9
+        self._last_query_time = 0.0
+
+    # ------------------------------------------------------------------
+    def _mesh_for(self, n: int):
+        return make_job_mesh(self.devices[:n], max_model=self.max_model_axis)
+
+    def _step_fn(self, n: int) -> Callable:
+        if n not in self._step_cache:
+            self._step_cache[n] = self.app.make_step(self._mesh_for(n))
+        return self._step_cache[n]
+
+    def init(self) -> Any:
+        return self.app.init_state(self.mesh)
+
+    def prewarm(self, sizes: Optional[List[int]] = None):
+        """AOT-compile candidate meshes (min/pref/max by default) so a later
+        resize costs only the state transfer — the TPU analogue of hiding
+        MPI_Comm_spawn latency (DESIGN.md §6). Returns seconds spent."""
+        t0 = time.perf_counter()
+        for n in sizes or [self.params.min_procs, self.params.preferred,
+                           self.params.max_procs]:
+            self._step_fn(self.params.clamp(n))
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    def maybe_reconfig(self, state, step: int):
+        """Algorithm 1: check role/inhibitors, query RMS, resize if told to."""
+        p = self.params
+        if step - self._last_query_step < max(p.sched_iterations, 1):
+            return state
+        if p.sched_period_s and \
+                time.monotonic() - self._last_query_time < p.sched_period_s:
+            return state
+        self._last_query_step = step
+        self._last_query_time = time.monotonic()
+
+        action = self.rms.query(step=step, current=self.current, params=p)
+        if action.kind == "none" or action.target == self.current:
+            return state
+        return self.apply_resize(state, step, action)
+
+    def _redistribute(self, state, new_shardings, target: int):
+        if self._custom_redistribute is not None:
+            state, stats = self._custom_redistribute(state, new_shardings)
+            return state, stats, {}
+        return redistribute_tree(state, new_shardings,
+                                 patterns=self.patterns,
+                                 from_procs=self.current, to_procs=target)
+
+    def apply_resize(self, state, step: int, action: Action, *,
+                     force: bool = False):
+        """Expand/shrink to action.target: reshard state, swap executable.
+
+        The target is re-checked after ``params.clamp``: a clamped action
+        that collapses to the current size is a no-op — no redistribution
+        runs and no ResizeEvent is logged.  ``force=True`` overrides the
+        guard for same-size *migrations* (the device set changed under the
+        job, e.g. after a failure), which do move state and are logged.
+        """
+        target = self.params.clamp(action.target)
+        if target == self.current and not force:
+            return state
+        new_mesh = self._mesh_for(target)
+        new_shardings = self.app.state_shardings(new_mesh)
+        state, stats, per_pattern = self._redistribute(state, new_shardings,
+                                                       target)
+        t0 = time.perf_counter()
+        self._step_fn(target)          # compile (cached across resizes)
+        recompile = time.perf_counter() - t0
+        kind = action.kind if target != self.current else "migrate"
+        self.events.append(ResizeEvent(
+            step=step, action=kind, from_procs=self.current,
+            to_procs=target, transfer=stats, recompile_s=recompile,
+            per_pattern=per_pattern))
+        self.current = target
+        self.mesh = new_mesh
+        return state
+
+    # ------------------------------------------------------------------
+    def step(self, state, step: int, *args):
+        return self._step_fn(self.current)(state, step, *args)
+
+    # fault tolerance: forced shrink onto survivors (DESIGN.md §6)
+    def handle_failure(self, state, step: int, failed_devices) -> Any:
+        failed = {d.id for d in failed_devices}
+        survivors = [d for d in self.devices if d.id not in failed]
+        self.devices = survivors
+        # legal size at or below the survivor count
+        sizes = [s for s in self.params.legal_sizes() if s <= len(survivors)]
+        if not sizes:
+            raise RuntimeError("not enough survivors to continue; restart "
+                               "from checkpoint (on-disk C/R path)")
+        self._step_cache.clear()
+        # force: even a same-size target is a migration (the device set
+        # changed), so the state must move onto the survivor mesh
+        return self.apply_resize(state, step, Action("shrink", max(sizes)),
+                                 force=True)
+
+
+def reconfig(runner: MalleableRunner, state, step: int):
+    """The DMR_RECONFIG point (Algorithm 1), as a one-line call."""
+    return runner.maybe_reconfig(state, step)

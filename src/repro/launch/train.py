@@ -10,7 +10,7 @@ Examples (CPU demo on host devices):
   ... --rms-file /tmp/resize.json      # echo '{"target": 8}' > /tmp/resize.json
 
 On a real TPU cluster the same driver runs under the production mesh; the
-only difference is the device inventory handed to MalleableRunner.
+only difference is the device inventory handed to dmr.MalleableRunner.
 """
 import argparse
 import os
@@ -42,9 +42,8 @@ import jax                                         # noqa: E402
 from repro.checkpoint import CheckpointManager     # noqa: E402
 from repro.configs import get_config, get_shape    # noqa: E402
 from repro.configs.base import ShapeConfig         # noqa: E402
-from repro.core import (FileRMS, MalleabilityParams, MalleableRunner,
-                        ScriptedRMS)               # noqa: E402
-from repro.core.lm_app import LMTrainApp           # noqa: E402
+import repro.dmr as dmr                            # noqa: E402
+from repro.core.lm_app import lm_train_app         # noqa: E402
 from repro.optim import AdamW, cosine_schedule     # noqa: E402
 
 
@@ -78,14 +77,14 @@ def main():
 
     opt = AdamW(learning_rate=cosine_schedule(args.lr, 10, args.steps),
                 moment_dtype=cfg.opt_moment_dtype)
-    app = LMTrainApp(cfg, shape, opt, seed=args.seed)
-    params = MalleabilityParams(args.min, args.max, args.pref)
+    app = lm_train_app(cfg, shape, opt, seed=args.seed)
+    params = dmr.set_parameters(args.min, args.max, args.pref)
     if args.rms_file:
-        rms = FileRMS(args.rms_file)
+        rms = dmr.connect(f"file:{args.rms_file}")
     else:
-        rms = ScriptedRMS({int(s.split(":")[0]): int(s.split(":")[1])
+        rms = dmr.connect({int(s.split(":")[0]): int(s.split(":")[1])
                            for s in args.resize_at})
-    runner = MalleableRunner(app, params, rms)
+    runner = dmr.MalleableRunner(app, params, rms)
     ckpt = CheckpointManager(args.checkpoint_dir or "/tmp/repro_ckpt",
                              every_steps=args.checkpoint_every)
 
@@ -94,7 +93,7 @@ def main():
     print(f"# elastic train: {cfg.name} on {runner.current} workers "
           f"(min {args.min} / pref {args.pref} / max {args.max})")
     for step in range(start, args.steps):
-        state = runner.maybe_reconfig(state, step)
+        state = dmr.reconfig(runner, state, step)
         state, metrics = runner.step(state, step)
         loss = float(jax.device_get(metrics["loss"]))
         print(f"step {step:4d}  workers {runner.current:3d}  "

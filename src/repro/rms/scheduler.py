@@ -167,8 +167,15 @@ class _SimulatorBase:
     """
 
     def __init__(self, jobs: List[Job], config: Optional[SimConfig] = None,
-                 policy: Union[str, Policy, None] = None):
+                 policy: Union[str, Policy, None] = None, *,
+                 resize_listener=None):
         self.cfg = config or SimConfig()
+        #: optional pure observer ``fn(record, job)`` invoked at every
+        #: resize, right after the job's work was synced to the resize
+        #: instant and the ``ResizeRecord`` was logged.  The co-simulation
+        #: adapter (``repro.dmr.cosim.SimRMS``) hooks here; listeners must
+        #: not mutate simulator state.
+        self.resize_listener = resize_listener
         self.policy = get_policy(policy)
         self.policy.configure(self.cfg)
         self.jobs = sorted(jobs, key=lambda j: j.submit_time)
@@ -233,9 +240,11 @@ class _SimulatorBase:
         j.next_reconfig_ok = self.now + max(
             j.app.params.sched_period_s, j.app.step_time(target),
             self.cfg.backfill_interval_s)
-        self.resize_log.append(ResizeRecord(
-            t=self.now, jid=j.jid, kind=kind,
-            from_procs=old, to_procs=target))
+        rec = ResizeRecord(t=self.now, jid=j.jid, kind=kind,
+                           from_procs=old, to_procs=target)
+        self.resize_log.append(rec)
+        if self.resize_listener is not None:
+            self.resize_listener(rec, j)
         self.n_resizes += 1
         self.resize_overhead_s += ovh
         self._post_resize(j)

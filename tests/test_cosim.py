@@ -1,0 +1,142 @@
+"""Co-simulation: a SimRMS-driven runner replays the simulated cluster's
+resize decisions, cross-checked record-for-record against ``resize_log``."""
+import jax.numpy as jnp
+import pytest
+
+import repro.dmr as dmr
+import repro.dmr.runner as runner_mod
+from repro.core.params import MalleabilityParams
+from repro.rms.scheduler import ReferenceSimulator, SimConfig, Simulator
+from repro.rms.workload import AppProfile, Job
+
+
+def _profile(name, t1, iters=40, pref=4):
+    return AppProfile(name=name, t1=t1, f=1.0, alpha=0.5, c=0.0, min_start=1,
+                      params=MalleabilityParams(2, 8, pref,
+                                                sched_period_s=0.0),
+                      state_mb=10.0, iterations=iters)
+
+
+def _workload():
+    """Tracked job grabs the cluster, shrinks when rigid work queues up,
+    expands back once the queue drains."""
+    a = _profile("tracked", 4000.0)
+    b = _profile("late", 900.0)
+    return [Job(jid=0, app=a, submit_time=0.0, moldable=True, malleable=True),
+            Job(jid=1, app=b, submit_time=300.0, moldable=True,
+                malleable=False),
+            Job(jid=2, app=b, submit_time=320.0, moldable=True,
+                malleable=False)]
+
+
+class _Dev:
+    def __init__(self, i):
+        self.id = i
+
+
+class _ToyApp:
+    """Real pytree state, stubbed meshes: the runner's resize machinery runs
+    end-to-end without a device farm."""
+
+    def init_state(self, mesh):
+        return {"w": jnp.arange(8.0), "i": jnp.int32(0)}
+
+    def state_shardings(self, mesh):
+        return {"w": None, "i": None}
+
+    def make_step(self, mesh):
+        return lambda s, i: (dict(s, i=s["i"] + 1), {})
+
+
+def _run_cosim(engine):
+    simrms = dmr.SimRMS(jobs=_workload(), jid=0, policy="algorithm2",
+                        config=SimConfig(nodes=10), engine=engine)
+    assert simrms.expected_resizes(), "scenario produced no resizes"
+
+    runner = dmr.MalleableRunner(
+        _ToyApp(), dmr.set_parameters(2, 8, 4), simrms,
+        devices=[_Dev(i) for i in range(8)],
+        redistribute=lambda s, sh: (s, dmr.TransferStats(1, 0.0, 2)),
+        initial_procs=simrms.start_procs)
+    state = runner.init()
+    for i in range(simrms.total_steps):
+        state = dmr.reconfig(runner, state, i)
+        state, _ = runner.step(state, i)
+    return simrms, runner
+
+
+def test_simrms_runner_matches_resize_log(monkeypatch):
+    monkeypatch.setattr(runner_mod, "make_job_mesh",
+                        lambda devices, max_model=16: len(devices))
+    simrms, runner = _run_cosim(Simulator)
+    # the tracked job shrank for the queue and re-expanded after it drained
+    kinds = [k for k, _, _ in simrms.expected_resizes()]
+    assert "shrink" in kinds and "expand" in kinds
+    # record-for-record agreement between the live runner and the simulator
+    matched = simrms.crosscheck(runner.events)
+    assert matched == simrms.expected_resizes()
+    # the runner consumed the whole schedule
+    assert simrms._cursor == len(simrms.schedule)
+
+
+def test_simrms_cosim_identical_across_engines(monkeypatch):
+    monkeypatch.setattr(runner_mod, "make_job_mesh",
+                        lambda devices, max_model=16: len(devices))
+    fast, r_fast = _run_cosim(Simulator)
+    ref, r_ref = _run_cosim(ReferenceSimulator)
+    assert fast.expected_resizes() == ref.expected_resizes()
+    assert [(e.action, e.from_procs, e.to_procs) for e in r_fast.events] == \
+        [(e.action, e.from_procs, e.to_procs) for e in r_ref.events]
+
+
+def test_crosscheck_raises_on_divergence():
+    simrms = dmr.SimRMS(jobs=_workload(), jid=0, policy="algorithm2",
+                        config=SimConfig(nodes=10))
+    with pytest.raises(ValueError, match="co-simulation divergence"):
+        simrms.crosscheck([])                   # runner did nothing
+
+
+def test_simrms_scenario_and_validation():
+    # scenario-library entry: the steady workload on defaults
+    simrms = dmr.SimRMS(scenario="steady", n_jobs=12, jid=3, seed=1)
+    assert simrms.result.makespan > 0
+    assert simrms.total_steps == simrms.job.app.iterations
+    with pytest.raises(KeyError, match="no job"):
+        dmr.SimRMS(jobs=_workload(), jid=99)
+    with pytest.raises(ValueError, match="needs jobs= or scenario="):
+        dmr.SimRMS()
+    with pytest.raises(ValueError, match="not malleable"):
+        dmr.SimRMS(jobs=_workload(), jid=1)
+
+
+def test_schedule_normalization_spreads_crowded_tail():
+    """Regression: resizes mapping to the same (or final) iteration must
+    still be consumable one query per step."""
+    simrms = dmr.SimRMS(jobs=_workload(), jid=0, policy="algorithm2",
+                        config=SimConfig(nodes=10))
+    total = simrms.total_steps
+    raw = [(total - 1, "a", None), (total - 1, "b", None),
+           (total - 1, "c", None)]
+    norm = simrms._normalize(raw)
+    dues = [d for d, _, _ in norm]
+    assert dues == [total - 3, total - 2, total - 1]
+    assert [x for _, x, _ in norm] == ["a", "b", "c"]   # order preserved
+    # same-step collisions in the middle are pushed strictly increasing
+    norm = simrms._normalize([(5, "a", None), (5, "b", None),
+                              (5, "c", None)])
+    assert [d for d, _, _ in norm] == [5, 6, 7]
+    # too many resizes for the step axis is a loud error
+    with pytest.raises(ValueError, match="raise total_steps"):
+        simrms._normalize([(0, None, None)] * (total + 1))
+
+
+def test_resize_listener_is_pure_observer():
+    """The hook must not perturb the engines' bit-identical results."""
+    jobs_a, jobs_b = _workload(), _workload()
+    base = Simulator(jobs_a, SimConfig(nodes=10), policy="algorithm2").run()
+    seen = []
+    hooked = Simulator(jobs_b, SimConfig(nodes=10), policy="algorithm2",
+                       resize_listener=lambda rec, j: seen.append(rec)).run()
+    assert base.summary() == hooked.summary()
+    assert base.resize_log == hooked.resize_log
+    assert seen == hooked.resize_log

@@ -1,0 +1,283 @@
+"""The ``repro.dmr`` facade: App spec, pattern registry, connectors, shims."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.dmr as dmr
+from repro.core.params import MalleabilityParams
+from repro.core.policy import Action, ClusterView
+
+
+# ----------------------------------------------------------------------
+# dmr.App
+# ----------------------------------------------------------------------
+
+def test_app_decorator_form_satisfies_protocol():
+    app = dmr.App(name="toy")
+
+    @app.init
+    def init(mesh):
+        return {"x": mesh}
+
+    @app.shardings
+    def shardings(mesh):
+        return {"x": None}
+
+    @app.step
+    def step(mesh):
+        return lambda state, i: (state, i)
+
+    assert isinstance(app, dmr.MalleableApp)
+    assert app.init_state("m") == {"x": "m"}
+    assert app.state_shardings("m") == {"x": None}
+    assert app.make_step("m")({"x": 1}, 7) == ({"x": 1}, 7)
+
+
+def test_app_constructor_form_and_missing_slot():
+    app = dmr.App(init=lambda m: 1, shardings=lambda m: 2,
+                  patterns={"t": "replicate"})
+    assert app.init_state(None) == 1
+    assert app.patterns == {"t": "replicate"}
+    with pytest.raises(TypeError, match="no 'step' function"):
+        app.make_step(None)
+
+
+def test_ensure_app_adapts_plain_and_protocol_objects():
+    class Proto:
+        def init_state(self, mesh): return "s"
+        def state_shardings(self, mesh): return "sh"
+        def make_step(self, mesh): return lambda *a: a
+
+    class Plain:
+        patterns = {"a": "default"}
+        def init(self, mesh): return "s"
+        def shardings(self, mesh): return "sh"
+        def step(self, mesh): return lambda *a: a
+
+    p = Proto()
+    assert dmr.ensure_app(p) is p
+    wrapped = dmr.ensure_app(Plain())
+    assert isinstance(wrapped, dmr.App)
+    assert wrapped.init_state(None) == "s"
+    assert wrapped.patterns == {"a": "default"}
+    with pytest.raises(TypeError, match="not a malleable app"):
+        dmr.ensure_app(object())
+
+
+def test_set_parameters_mirrors_paper_call():
+    p = dmr.set_parameters(2, 32, 16, sched_period_s=10.0)
+    assert isinstance(p, MalleabilityParams)
+    assert (p.min_procs, p.max_procs, p.preferred) == (2, 32, 16)
+    assert p.sched_period_s == 10.0
+
+
+# ----------------------------------------------------------------------
+# pattern registry
+# ----------------------------------------------------------------------
+
+def test_get_pattern_specs_and_registry_errors():
+    assert dmr.get_pattern("default").spec() == "default"
+    assert dmr.get_pattern("blockcyclic:4").block == 4
+    assert dmr.get_pattern("blockcyclic").block == 1
+    assert dmr.get_pattern("replicate").spec() == "replicate"
+    pat = dmr.get_pattern("blockcyclic:2")
+    assert dmr.get_pattern(pat) is pat           # instances pass through
+    with pytest.raises(KeyError, match="unknown redistribution pattern"):
+        dmr.get_pattern("no-such-pattern")
+
+
+def test_register_custom_pattern_family():
+    class Null(dmr.Pattern):
+        name = "null"
+
+    dmr.register_pattern("null-test", lambda arg: Null())
+    try:
+        assert isinstance(dmr.get_pattern("null-test"), Null)
+        with pytest.raises(ValueError, match="must not contain"):
+            dmr.register_pattern("a:b", lambda arg: Null())
+    finally:
+        dmr.PATTERNS.pop("null-test", None)
+
+
+def test_redistribute_tree_per_subtree_selection():
+    state = {"a": jnp.arange(64.0).reshape(16, 4),
+             "nest": {"table": jnp.ones(8), "n": jnp.int32(3)}}
+    dev = jax.devices()[0]
+    sh = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev), state)
+    out, total, per = dmr.redistribute_tree(
+        state, sh, patterns={"nest/table": "replicate",
+                             "a": "blockcyclic:2"},
+        from_procs=4, to_procs=8, donate=False)
+    # values are bit-identical regardless of pattern
+    for x, y in zip(jax.tree.leaves(state), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # per-pattern accounting: blockcyclic counts only owner-changing blocks
+    # (blocks 4..7 of 8 change owner 4->8 at block=2: 4 blocks * 2 rows *
+    # 16 B), replicate counts the broadcast (8 f32 * 8 workers), default
+    # gets the leftover scalar
+    assert per["blockcyclic:2"].bytes_moved == 4 * 2 * 16
+    assert per["replicate"].bytes_moved == 8 * 4 * 8
+    assert per["default"].bytes_moved == 4
+    assert total.bytes_moved == sum(s.bytes_moved for s in per.values())
+    assert total.n_leaves == 3
+
+
+def test_redistribute_tree_distinct_callables_stay_distinct():
+    """Regression: two callable patterns with colliding spec strings must
+    each be applied to their own subtree (grouping is by identity)."""
+    state = {"a": jnp.ones(4), "b": jnp.ones(4)}
+    dev = jax.devices()[0]
+    sh = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev), state)
+    out, _, per = dmr.redistribute_tree(
+        state, sh,
+        patterns={"a": lambda l, s, c: l * 2, "b": lambda l, s, c: l * 3},
+        from_procs=2, to_procs=4, donate=False)
+    np.testing.assert_array_equal(np.asarray(out["a"]), 2 * np.ones(4))
+    np.testing.assert_array_equal(np.asarray(out["b"]), 3 * np.ones(4))
+    # spec-string collision surfaces as suffixed keys, not a silent merge
+    assert sorted(per) == ["custom", "custom#2"]
+
+
+def test_redistribute_tree_longest_prefix_and_star():
+    state = {"opt": {"mu": jnp.ones(4), "nu": jnp.ones(4)}}
+    dev = jax.devices()[0]
+    sh = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev), state)
+    _, _, per = dmr.redistribute_tree(
+        state, sh, patterns={"opt": "replicate", "opt/nu": "blockcyclic:1",
+                             "*": "default"},
+        from_procs=2, to_procs=4, donate=False)
+    assert set(per) == {"replicate", "blockcyclic:1"}
+
+
+# ----------------------------------------------------------------------
+# connectors
+# ----------------------------------------------------------------------
+
+def test_connect_factory():
+    s = dmr.connect({3: 8})
+    assert isinstance(s, dmr.ScriptedRMS)
+    f = dmr.connect("file:/tmp/nonexistent-cmd.json")
+    assert isinstance(f, dmr.FileRMS)
+    assert dmr.connect(s) is s
+    assert dmr.connect(None) is None
+    with pytest.raises(ValueError, match="unknown RMS spec"):
+        dmr.connect("bogus:spec")
+    with pytest.raises(TypeError, match="RMSConnector"):
+        dmr.connect(42)
+
+
+def test_file_rms_malformed_json_is_none(tmp_path):
+    """Regression: a malformed / mid-write command file must not crash the
+    training loop — and a later valid write must still be picked up."""
+    p = tmp_path / "cmd.json"
+    rms = dmr.FileRMS(str(p))
+    params = MalleabilityParams(2, 8, 4)
+
+    # missing file
+    assert rms.query(step=0, current=4, params=params).kind == "none"
+    # malformed (mid-write torso)
+    p.write_text('{"target": ')
+    assert rms.query(step=1, current=4, params=params).kind == "none"
+    # wrong JSON shape (list, not object)
+    p.write_text("[8]")
+    assert rms.query(step=2, current=4, params=params).kind == "none"
+    # non-integer target
+    p.write_text('{"target": "wide"}')
+    assert rms.query(step=3, current=4, params=params).kind == "none"
+    # the write completes -> the same file now parses and is consumed
+    p.write_text('{"target": 8}')
+    act = rms.query(step=4, current=4, params=params)
+    assert (act.kind, act.target) == ("expand", 8)
+    # consumed once: unchanged mtime is not re-applied
+    assert rms.query(step=5, current=8, params=params).kind == "none"
+
+
+def test_file_rms_valid_command_clamped(tmp_path):
+    p = tmp_path / "cmd.json"
+    p.write_text(json.dumps({"target": 99}))
+    rms = dmr.FileRMS(str(p))
+    act = rms.query(step=0, current=4, params=MalleabilityParams(2, 8, 4))
+    assert (act.kind, act.target) == ("expand", 8)
+
+
+def test_policy_rms_runs_algorithm2():
+    rms = dmr.PolicyRMS(lambda: ClusterView(available=4,
+                                            pending_min_sizes=[]))
+    act = rms.query(step=0, current=4, params=MalleabilityParams(2, 8, 4))
+    assert (act.kind, act.target) == ("expand", 8)
+
+
+# ----------------------------------------------------------------------
+# deprecation shims
+# ----------------------------------------------------------------------
+
+def test_core_shims_warn_and_delegate():
+    import repro.core as core
+
+    with pytest.warns(DeprecationWarning, match="repro.dmr"):
+        rms = core.ScriptedRMS({1: 2})
+    assert isinstance(rms, dmr.ScriptedRMS)
+    with pytest.warns(DeprecationWarning, match="repro.dmr"):
+        core.FileRMS("/tmp/x.json")
+    with pytest.warns(DeprecationWarning, match="repro.dmr"):
+        core.PolicyRMS(lambda: ClusterView(0, []))
+
+    class _App:
+        def init_state(self, mesh): return {}
+        def state_shardings(self, mesh): return {}
+        def make_step(self, mesh): return lambda s, i: (s, {})
+
+    with pytest.warns(DeprecationWarning, match="repro.dmr"):
+        runner = core.MalleableRunner(_App(), MalleabilityParams(1, 1, 1),
+                                      dmr.ScriptedRMS({}))
+    assert isinstance(runner, dmr.MalleableRunner)
+    with pytest.warns(DeprecationWarning, match="repro.dmr"):
+        core.dmr_reconfig(runner, {}, 0)
+
+
+def test_lm_train_app_is_dmr_app():
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig
+    from repro.core.lm_app import LMTrainApp, lm_train_app
+
+    cfg = get_config("mamba2-370m-smoke")
+    shape = ShapeConfig("t", "train", 32, 4)
+    app = lm_train_app(cfg, shape)
+    assert isinstance(app, dmr.App)
+    with pytest.warns(DeprecationWarning, match="repro.dmr"):
+        LMTrainApp(cfg, shape)
+
+
+# ----------------------------------------------------------------------
+# runner facade behaviors
+# ----------------------------------------------------------------------
+
+def test_runner_initial_procs_and_scripted_noop_guard():
+    import repro.dmr.runner as runner_mod
+
+    class _Dev:
+        def __init__(self, i): self.id = i
+
+    class _App:
+        def init_state(self, mesh): return {"w": jnp.zeros(4)}
+        def state_shardings(self, mesh): return {"w": None}
+        def make_step(self, mesh): return lambda s, i: (s, {})
+
+    import unittest.mock as mock
+    with mock.patch.object(runner_mod, "make_job_mesh",
+                           lambda devices, max_model=16: len(devices)):
+        r = dmr.MalleableRunner(
+            _App(), dmr.set_parameters(2, 8, 4), dmr.connect({5: 2}),
+            devices=[_Dev(i) for i in range(8)],
+            redistribute=lambda s, sh: (s, dmr.TransferStats(0, 0.0, 1)),
+            initial_procs=8)
+        assert r.current == 8                   # moldable start, not pref
+        s = r.init()
+        # ScriptedRMS asks for 2 at step 5; steps 0-4 are no-ops
+        for i in range(6):
+            s = dmr.reconfig(r, s, i)
+        assert [(e.action, e.from_procs, e.to_procs) for e in r.events] == \
+            [("shrink", 8, 2)]

@@ -7,9 +7,9 @@ end-to-end variant (real meshes, real state) lives in test_elastic.py.
 """
 import pytest
 
-import repro.core.api as api
-from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
-from repro.core.redistribute import TransferStats
+import repro.dmr.runner as runner_mod
+from repro.dmr import MalleabilityParams, MalleableRunner, ScriptedRMS
+from repro.dmr import TransferStats
 
 
 class _Dev:
@@ -31,7 +31,7 @@ class _FakeApp:
 
 
 def _runner(monkeypatch, n_devices=8, params=None):
-    monkeypatch.setattr(api, "make_job_mesh",
+    monkeypatch.setattr(runner_mod, "make_job_mesh",
                         lambda devices, max_model=16: ("mesh", len(devices)))
     xfers = []
 
@@ -75,13 +75,46 @@ def test_failure_below_min_procs_raises(monkeypatch):
         r.handle_failure(state, step=0, failed_devices=r.devices[1:])
 
 
-def test_failure_keeping_current_size_still_rebuilds(monkeypatch):
-    # 8 devices, running at 4: losing the 4 spare devices must not resize
-    # (4 survivors support the current size) but still rebuilds the cache
-    r, _ = _runner(monkeypatch)
+def test_failure_keeping_current_size_migrates(monkeypatch):
+    # 8 devices, running at 4: losing devices 1-2 keeps the size legal at 4
+    # but changes the device set under the job — a same-size *migration*:
+    # the state still moves onto the survivor mesh and is logged as such
+    # (the clamp guard only suppresses RMS-driven no-ops, not migrations)
+    r, xfers = _runner(monkeypatch)
     state = r.init()
     r.prewarm()
-    state = r.handle_failure(state, step=5, failed_devices=r.devices[4:])
+    state = r.handle_failure(state, step=5, failed_devices=r.devices[1:3])
     assert r.current == 4
     assert set(r._step_cache) == {4}
-    assert len(r.devices) == 4
+    assert len(r.devices) == 6
+    assert len(r.events) == 1
+    ev = r.events[0]
+    assert (ev.action, ev.from_procs, ev.to_procs) == ("migrate", 4, 4)
+    assert xfers, "state was not migrated onto the survivor mesh"
+
+
+def test_clamped_noop_action_is_guarded(monkeypatch):
+    """Regression: a clamped Action whose target collapses to the current
+    size must neither redistribute nor log a ResizeEvent."""
+    from repro.core.policy import Action
+
+    r, xfers = _runner(monkeypatch)
+    state = r.init()
+    # current == preferred == 4; an absurd expand beyond max clamps to 8
+    # (a real resize), but with current == max it collapses to a no-op
+    r.current = 8
+    out = r.apply_resize(state, step=7, action=Action("expand", 99))
+    assert out is state
+    assert r.events == []
+    assert xfers == []
+    # shrink below min clamps to min == 2 from current 2: same guard
+    r.current = 2
+    out = r.apply_resize(state, step=8, action=Action("shrink", 1))
+    assert out is state
+    assert r.events == [] and xfers == []
+    # a genuinely resizing clamped action still goes through
+    out = r.apply_resize(state, step=9, action=Action("expand", 99))
+    assert r.current == 8
+    assert [(e.action, e.from_procs, e.to_procs) for e in r.events] == \
+        [("expand", 2, 8)]
+    assert len(xfers) == 1

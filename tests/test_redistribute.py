@@ -12,8 +12,11 @@ from repro.core.redistribute import (blockcyclic_merge,
                                      blockcyclic_split,
                                      default_redistribution,
                                      redistribute_state, state_bytes)
+from repro.dmr import get_pattern
 
 pows2 = st.sampled_from([1, 2, 4, 8, 16])
+# arbitrary (non-power-of-two) worker counts
+anyprocs = st.integers(1, 12)
 
 
 @settings(max_examples=50, deadline=None)
@@ -49,6 +52,94 @@ def test_blockcyclic_redistribute(old, new, k, block):
     out = blockcyclic_redistribute(parts, new, block)
     assert len(out) == new
     np.testing.assert_array_equal(blockcyclic_merge(out, block), data)
+
+
+@settings(max_examples=60, deadline=None)
+@given(old=anyprocs, new=anyprocs, rows_per=st.integers(1, 6),
+       width=st.integers(1, 3))
+def test_default_redistribution_non_power_of_two(old, new, rows_per, width):
+    """1-D uniform redistribution round-trips across arbitrary counts
+    (the paper's multiple/divisor restriction is a policy choice, not a
+    pattern limitation — the fallback re-splits the concatenation)."""
+    total_rows = old * new * rows_per          # divisible by both
+    data = np.arange(total_rows * width, dtype=np.float64).reshape(
+        total_rows, width)
+    parts = list(np.split(data, old, axis=0))
+    out = default_redistribution(parts, new)
+    np.testing.assert_array_equal(np.concatenate(out, axis=0), data)
+    back = default_redistribution(out, old)
+    for a, b in zip(back, parts):
+        np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=60, deadline=None)
+@given(old=anyprocs, new=anyprocs, nblocks_per=st.integers(1, 5),
+       block=st.integers(1, 5))
+def test_blockcyclic_roundtrip_non_power_of_two(old, new, nblocks_per, block):
+    n = old * new * nblocks_per * block
+    data = np.arange(n, dtype=np.int64)
+    parts = blockcyclic_split(data, old, block)
+    out = blockcyclic_redistribute(parts, new, block)
+    assert len(out) == new
+    np.testing.assert_array_equal(blockcyclic_merge(out, block), data)
+    back = blockcyclic_redistribute(out, old, block)
+    for a, b in zip(back, parts):
+        np.testing.assert_array_equal(a, b)
+
+
+# -- per-pattern TransferStats through the repro.dmr registry -----------
+
+@settings(max_examples=60, deadline=None)
+@given(old=anyprocs, new=anyprocs, rows_per=st.integers(1, 4),
+       width=st.integers(1, 3))
+def test_default_pattern_host_stats(old, new, rows_per, width):
+    pat = get_pattern("default")
+    total = old * new * rows_per
+    data = np.arange(total * width, dtype=np.float32).reshape(total, width)
+    parts = list(np.split(data, old, axis=0))
+    out, stats = pat.host_redistribute(parts, new)
+    np.testing.assert_array_equal(np.concatenate(out, axis=0), data)
+    # communication volume: only rows whose owner changes, never the total
+    assert 0 <= stats.bytes_moved <= data.nbytes
+    assert stats.n_leaves == new
+    if new == old:
+        assert stats.bytes_moved == 0          # identity resize moves nothing
+    row_b = width * 4
+    old_owner = np.repeat(np.arange(old), [p.shape[0] for p in parts])
+    new_owner = np.repeat(np.arange(new), [p.shape[0] for p in out])
+    assert stats.bytes_moved == row_b * int(
+        np.count_nonzero(old_owner != new_owner))
+
+
+@settings(max_examples=60, deadline=None)
+@given(old=anyprocs, new=anyprocs, nblocks_per=st.integers(1, 4),
+       block=st.integers(1, 4))
+def test_blockcyclic_pattern_host_stats(old, new, nblocks_per, block):
+    pat = get_pattern(f"blockcyclic:{block}")
+    n = old * new * nblocks_per * block
+    data = np.arange(n, dtype=np.int64)
+    parts = blockcyclic_split(data, old, block)
+    out, stats = pat.host_redistribute(parts, new)
+    np.testing.assert_array_equal(blockcyclic_merge(out, block), data)
+    assert 0 <= stats.bytes_moved <= data.nbytes
+    if new == old:
+        assert stats.bytes_moved == 0
+    # exact volume: blocks whose round-robin owner changes
+    blocks = np.arange(n // block)
+    changed = (blocks % old) != (blocks % new)
+    assert stats.bytes_moved == int(changed.sum()) * block * 8
+
+
+@settings(max_examples=30, deadline=None)
+@given(old=anyprocs, new=anyprocs, rows=st.integers(1, 16))
+def test_replicate_pattern_host_stats(old, new, rows):
+    pat = get_pattern("replicate")
+    src = np.arange(rows, dtype=np.float64)
+    out, stats = pat.host_redistribute([src] * old, new)
+    assert len(out) == new
+    for p in out:
+        np.testing.assert_array_equal(p, src)
+    assert stats.bytes_moved == src.nbytes * new   # broadcast payload
 
 
 def test_expand_then_shrink_identity():
