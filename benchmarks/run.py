@@ -9,11 +9,11 @@ import sys
 import traceback
 
 from benchmarks import (allocation_rate, energy, fault_tolerance,
-                        kernels_bench, partial_malleability, per_job_times,
-                        redistribution_overhead, scaling_study,
-                        scenario_suite, submission_modes, tpu_lm_workload,
-                        trace_replay, usability_sloc, workload_evolution,
-                        workload_speedup)
+                        kernels_bench, live_cluster, partial_malleability,
+                        per_job_times, redistribution_overhead,
+                        scaling_study, scenario_suite, submission_modes,
+                        tpu_lm_workload, trace_replay, usability_sloc,
+                        workload_evolution, workload_speedup)
 
 BENCHES = [
     ("fig3", scaling_study),
@@ -31,6 +31,7 @@ BENCHES = [
     ("straggler", fault_tolerance),
     ("scenarios", scenario_suite),
     ("trace_replay", trace_replay),
+    ("live_cluster", live_cluster),
 ]
 
 

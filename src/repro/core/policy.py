@@ -60,6 +60,31 @@ class ClusterView:
     reclaimable_others: int = 0
 
 
+def reclaimable_workers(tenants, exclude=None) -> int:
+    """Workers the *other* running malleable jobs could release by
+    shrinking to their preferred sizes — ``ClusterView.reclaimable_others``
+    as both the simulator engines and the live ``dmr.Cluster`` define it.
+
+    ``tenants`` yields duck-typed running jobs exposing ``nprocs``,
+    ``malleable`` and malleability params at ``.app.params``."""
+    return sum(max(0, t.nprocs - t.app.params.preferred)
+               for t in tenants
+               if t is not exclude and getattr(t, "malleable", False))
+
+
+def live_view(*, available: int, pending_min_sizes: Sequence[int],
+              tenants, exclude=None) -> ClusterView:
+    """The ClusterView one running job sees, built from live co-tenants:
+    idle workers, the pending queue's minimum requests, and the pooled
+    reclaimable workers of every *other* running malleable job.  One
+    definition serves the reference simulator engine and ``dmr.Cluster``
+    (the fast engine maintains the same quantities incrementally)."""
+    return ClusterView(available=available,
+                       pending_min_sizes=list(pending_min_sizes),
+                       reclaimable_others=reclaimable_workers(tenants,
+                                                              exclude))
+
+
 def decide(current: int, params: MalleabilityParams,
            cluster: ClusterView) -> Action:
     """Algorithm 2."""

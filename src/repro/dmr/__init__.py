@@ -12,17 +12,21 @@ The paper's minimalist MPI-like call set, mapped one-to-one (docs/api.md):
                                          SimRMS (co-simulation)
 
 One app definition runs live (PolicyRMS/FileRMS), scripted (ScriptedRMS),
-or inside a simulated cluster (SimRMS) without changing a line of user
-code.  ``repro.core`` re-exports this surface as deprecation shims for
-pre-facade callers.
+inside a simulated cluster (SimRMS), or co-scheduled with other live jobs
+on one shared device pool (``dmr.Cluster`` — the multi-tenant elastic
+runtime, with whole-workload co-simulation via ``SimWorkload``) without
+changing a line of user code.  ``repro.core`` re-exports this surface as
+deprecation shims for pre-facade callers.
 """
 from repro.core.params import MalleabilityParams
 from repro.core.policy import Action, ClusterView, Policy, get_policy
 from repro.core.redistribute import TransferStats
 from repro.dmr.app import App, MalleableApp, ensure_app
+from repro.dmr.cluster import (Cluster, ClusterResult, ClusterRMS, JobRecord,
+                               default_app_factory)
 from repro.dmr.connectors import (FileRMS, PolicyRMS, RMSConnector,
                                   ScriptedRMS, connect)
-from repro.dmr.cosim import SimRMS
+from repro.dmr.cosim import SimRMS, SimWorkload
 from repro.dmr.patterns import (PATTERNS, BlockCyclicPattern, CallablePattern,
                                 DefaultPattern, Pattern, ReplicatePattern,
                                 ResizeContext, get_pattern, redistribute_tree,
@@ -50,6 +54,9 @@ __all__ = [
     # connectors
     "RMSConnector", "ScriptedRMS", "PolicyRMS", "FileRMS", "SimRMS",
     "connect",
+    # multi-tenant live cluster
+    "Cluster", "ClusterRMS", "ClusterResult", "JobRecord", "SimWorkload",
+    "default_app_factory",
     # shared types
     "MalleableApp", "ensure_app", "MalleabilityParams", "Action",
     "ClusterView", "Policy", "get_policy", "TransferStats", "ResizeEvent",

@@ -1,0 +1,525 @@
+"""``dmr.Cluster`` — a live multi-tenant elastic runtime on one device pool.
+
+The paper's headline claim (§5: >3x global throughput from malleability)
+is a *cluster-level* result; this module exercises it live instead of
+only in the discrete-event simulator: many real ``MalleableRunner`` jobs
+share one device pool, a named ``Policy`` arbitrates their expand/shrink
+through per-tenant :class:`ClusterRMS` connectors, and the scheduler loop
+mirrors the simulator's semantics — priority-ordered pending queue
+(``Policy.priority_key``), rigid jobs start at their upper limit and
+moldable jobs at whatever fits, backfill, post-shrink boost — on a
+discrete *cluster-tick* clock where every running tenant advances one
+iteration per tick.
+
+Because each tenant's RMS query is answered from the **live** cluster
+view (idle devices, pending queue minimum requests, reclaimable workers
+of the co-tenants — ``repro.core.policy.live_view``, the same definition
+the simulator engines use), the existing policies (``algorithm2``,
+``energy``, ``throughput``) drive real multi-job elasticity unmodified.
+
+Time: one tick = one scheduler round = one iteration of every running
+job.  ``tick_s`` (default 1.0) converts ticks to the nominal seconds all
+rate metrics are reported in (``summary()`` mirrors ``SimResult``);
+``wall_s`` is the actual execution time, reported separately.
+
+Decision modes:
+
+* ``decisions="policy"`` (default) — the live elastic cluster above.
+* ``decisions="cosim"`` — the whole workload is first run through the
+  discrete-event ``Simulator`` and the live cluster *replays* its
+  decisions (start order/sizes, per-job resize schedules via
+  ``dmr.SimWorkload``); ``Cluster.crosscheck(result)`` then verifies
+  every runner's resize trail against the simulator's ``resize_log``
+  record-for-record.  This is the workload-wide generalization of the
+  single-job ``SimRMS`` co-simulation.
+
+    specs = materialize_live("steady", n_jobs=8, device_count=8)
+    cluster = dmr.Cluster(specs, policy="algorithm2")
+    result = cluster.run()
+    print(result.summary())
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.params import MalleabilityParams
+from repro.core.policy import Action, get_policy, live_view
+from repro.dmr.app import App, MalleableApp, ensure_app
+from repro.dmr.cosim import SimWorkload
+from repro.dmr.runner import MalleableRunner, ResizeEvent
+from repro.rms.workload import (MOLDABLE, RIGID, AppProfile, Job,
+                                LiveJobSpec)
+
+
+def default_app_factory(spec: LiveJobSpec) -> App:
+    """A tiny real-JAX app for profile-only live jobs: one sharded f32
+    vector plus a step counter.  Small enough that an 8-device pool runs
+    whole workloads in seconds; real enough that every resize moves
+    actual device buffers through the redistribution patterns."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    length = 840                    # lcm(1..8): shardable at any live size
+
+    def shardings(mesh):
+        return {"x": NamedSharding(mesh, P(("data", "model"))),
+                "i": NamedSharding(mesh, P())}
+
+    def init(mesh):
+        sh = shardings(mesh)
+        return {"x": jax.device_put(
+                    jnp.arange(length, dtype=jnp.float32), sh["x"]),
+                "i": jax.device_put(jnp.zeros((), jnp.int32), sh["i"])}
+
+    def step(mesh):
+        @jax.jit
+        def f(state):
+            return {"x": state["x"] * 1.000001 + 1e-3, "i": state["i"] + 1}
+        return lambda state, i, *a: (f(state), {})
+
+    return App(init=init, shardings=shardings, step=step,
+               name=f"live-{spec.app.name}")
+
+
+class ClusterRMS:
+    """The :class:`RMSConnector` a ``dmr.Cluster`` hands each tenant: a
+    query evaluates the cluster's shared policy against the *live*
+    cluster view (or, in cosim mode, replays the simulator's schedule for
+    this tenant), and an expand decision carries its device grant — the
+    runner's pool is extended before it builds the larger mesh."""
+
+    def __init__(self, cluster: "Cluster", tenant: "_Tenant"):
+        self.cluster = cluster
+        self.tenant = tenant
+
+    def query(self, *, step: int, current: int,
+              params: MalleabilityParams) -> Action:
+        return self.cluster._decide(self.tenant, step, current, params)
+
+
+class _Tenant:
+    """One job of the live cluster: the runner + scheduling bookkeeping.
+
+    Duck-types the simulator's ``Job`` surface (``submit_time``,
+    ``boosted``, ``remaining_work``, ``nprocs``, ``malleable``, ``app``
+    with ``exec_time``/``params``) so ``Policy.priority_key`` /
+    ``Policy.decide`` see the same shape live as simulated."""
+
+    def __init__(self, spec: LiveJobSpec, exec_app: MalleableApp):
+        self.spec = spec
+        self.jid = spec.jid
+        # the live profile: original cost model, pool-clamped params and
+        # scaled step count — identical to the Job handed to the cosim
+        # Simulator, so both sides see one cost/param surface
+        self.app = dataclasses.replace(spec.app, params=spec.params,
+                                       iterations=spec.steps)
+        self.params = spec.params
+        self.exec_app = exec_app
+        self.moldable = spec.moldable
+        self.malleable = spec.malleable
+        self.submit_step = spec.submit_step
+        self.steps = spec.steps
+        self.runner: Optional[MalleableRunner] = None
+        self.rms: Optional[ClusterRMS] = None
+        self.state = None
+        self.step = 0
+        self.boosted = False
+        self.start_tick = -1
+        self.end_tick = -1
+        self.start_procs = 0
+
+    # -- duck-typed Job surface for the policies ------------------------
+    @property
+    def submit_time(self) -> float:
+        return float(self.submit_step)
+
+    @property
+    def remaining_work(self) -> float:
+        return max(0.0, 1.0 - self.step / self.steps)
+
+    @property
+    def nprocs(self) -> int:
+        return self.runner.current if self.runner is not None else 0
+
+    def request(self) -> Tuple[int, int]:
+        p = self.params
+        if self.moldable:
+            return (p.min_procs, p.max_procs)
+        return (p.max_procs, p.max_procs)
+
+
+@dataclasses.dataclass
+class JobRecord:
+    """Per-job outcome of a live cluster run (tick units)."""
+    jid: int
+    name: str
+    submit_step: int
+    start_tick: int
+    end_tick: int
+    start_procs: int
+    final_procs: int
+    resizes: List[Tuple[str, int, int]]
+
+    def waiting(self) -> float:
+        return float(self.start_tick - self.submit_step)
+
+    def execution(self) -> float:
+        return float(self.end_tick - self.start_tick)
+
+    def completion(self) -> float:
+        return float(self.end_tick - self.submit_step)
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    """Workload-level outcome; ``summary()`` mirrors ``SimResult`` (rates
+    on the nominal ``tick_s`` clock, real execution time in ``wall_s``)."""
+    records: List[JobRecord]
+    makespan_ticks: int
+    alloc_rate: float
+    energy_kwh: float
+    n_resizes: int
+    tick_s: float
+    wall_s: float
+    events_by_jid: Dict[int, List[ResizeEvent]]
+    timeline: Dict[str, List]
+
+    def mean(self, fn) -> float:
+        if not self.records:
+            return 0.0
+        return sum(fn(r) for r in self.records) / len(self.records)
+
+    def summary(self) -> Dict[str, float]:
+        makespan_s = self.makespan_ticks * self.tick_s
+        return {
+            "makespan_s": makespan_s,
+            "mean_wait_s": self.mean(JobRecord.waiting) * self.tick_s,
+            "mean_exec_s": self.mean(JobRecord.execution) * self.tick_s,
+            "mean_completion_s": self.mean(JobRecord.completion) * self.tick_s,
+            "alloc_rate": self.alloc_rate,
+            "energy_kwh": self.energy_kwh,
+            "throughput_jps": len(self.records) / makespan_s
+                if makespan_s > 0 else 0.0,
+            "n_resizes": self.n_resizes,
+            "wall_s": self.wall_s,
+        }
+
+
+class Cluster:
+    """Co-schedule many live malleable jobs on one shared device pool.
+
+    ``workload`` is a list of :class:`repro.rms.workload.LiveJobSpec`
+    (see ``materialize_live``) and/or explicit ``(app, params,
+    submit_step[, mode[, malleable]])`` tuples (``dmr.App``,
+    ``MalleabilityParams``, arrival tick; default flexible —
+    ``mode="rigid"`` / ``malleable=False`` opt out).  ``app_factory``
+    builds the executable for profile-only specs (default:
+    :func:`default_app_factory`, a tiny real-JAX app).
+
+    ``devices`` defaults to ``jax.devices()``; every tenant's mesh is
+    built from an explicit — possibly non-contiguous — slice of this one
+    pool, and devices move between tenants only through the cluster
+    (grant on start/expand, reclaim on shrink/completion), audited every
+    tick against double-grants and leaks.
+    """
+
+    def __init__(self, workload: Sequence, devices: Optional[List] = None, *,
+                 policy=None, decisions: str = "policy",
+                 app_factory: Optional[Callable[[LiveJobSpec], App]] = None,
+                 engine=None, default_steps: int = 16,
+                 tick_s: float = 1.0, idle_w: float = 100.0,
+                 loaded_w: float = 340.0, max_model_axis: int = 16,
+                 max_ticks: int = 100_000, prewarm: bool = False):
+        if decisions not in ("policy", "cosim"):
+            raise ValueError(f"decisions={decisions!r}: expected 'policy' "
+                             f"or 'cosim'")
+        if devices is None:
+            import jax
+            devices = jax.devices()
+        self.devices = list(devices)
+        self.idle_w = idle_w
+        self.loaded_w = loaded_w
+        self.policy = get_policy(policy)
+        # the same SimConfig the cosim Simulator gets: live and simulated
+        # policy configuration can never drift apart
+        self.policy.configure(self._sim_config())
+        self.decisions = decisions
+        self.engine = engine
+        self.app_factory = app_factory or default_app_factory
+        self.default_steps = default_steps
+        self.tick_s = tick_s
+        self.max_model_axis = max_model_axis
+        self.max_ticks = max_ticks
+        self.prewarm = prewarm
+
+        self.tenants = [self._as_tenant(entry, i)
+                        for i, entry in enumerate(workload)]
+        jids = [t.jid for t in self.tenants]
+        if len(set(jids)) != len(jids):
+            raise ValueError(f"duplicate jids in the workload: {jids}")
+        pool = len(self.devices)
+        for t in self.tenants:
+            lo, hi = t.request()
+            if lo > pool:
+                raise ValueError(
+                    f"job {t.jid} can never start: requests >= {lo} workers "
+                    f"on a {pool}-device pool")
+        self._pool_ids = sorted(d.id for d in self.devices)
+        if len(set(self._pool_ids)) != len(self._pool_ids):
+            raise ValueError("duplicate device ids in the pool")
+        self.simwl: Optional[SimWorkload] = None
+        if decisions == "cosim":
+            self.simwl = SimWorkload(
+                self._sim_jobs(),
+                total_steps={t.jid: t.steps for t in self.tenants},
+                config=self._sim_config(), policy=self.policy, engine=engine)
+
+    # -- construction helpers -------------------------------------------
+    def _as_tenant(self, entry, i: int) -> _Tenant:
+        if isinstance(entry, LiveJobSpec):
+            return _Tenant(entry, ensure_app(self.app_factory(entry)))
+        if isinstance(entry, tuple) and 3 <= len(entry) <= 5:
+            # (app, params, submit_step[, mode[, malleable]]) — flexible
+            # (moldable + malleable) unless the optional flags say not
+            app, params, submit_step = entry[:3]
+            mode = entry[3] if len(entry) > 3 else MOLDABLE
+            if mode not in (RIGID, MOLDABLE):
+                raise ValueError(f"workload entry {i}: mode {mode!r} is "
+                                 f"not 'rigid'/'moldable'")
+            profile = AppProfile(
+                name=getattr(app, "name", f"job{i}"), t1=600.0, f=1.0,
+                alpha=0.5, c=0.0, min_start=params.min_procs, params=params,
+                state_mb=1.0, iterations=self.default_steps)
+            spec = LiveJobSpec(jid=i, app=profile, params=params,
+                               submit_step=int(submit_step),
+                               steps=self.default_steps,
+                               moldable=mode == MOLDABLE,
+                               malleable=bool(entry[4])
+                               if len(entry) > 4 else True)
+            return _Tenant(spec, ensure_app(app))
+        raise TypeError(
+            f"workload entry {entry!r}: expected a LiveJobSpec or an "
+            f"(app, MalleabilityParams, submit_step[, mode[, malleable]]) "
+            f"tuple")
+
+    def _sim_jobs(self) -> List[Job]:
+        """The cosim Simulator's input: fresh Jobs over the tenants' live
+        profiles (pool-clamped params, scaled step counts), arriving at
+        their cluster ticks — the simulated and live clusters see exactly
+        the same workload."""
+        return [Job(jid=t.jid, app=t.app, submit_time=float(t.submit_step),
+                    moldable=t.moldable, malleable=t.malleable)
+                for t in self.tenants]
+
+    def _sim_config(self):
+        from repro.rms.scheduler import SimConfig
+        return SimConfig(nodes=len(self.devices), idle_w=self.idle_w,
+                         loaded_w=self.loaded_w, record_timeline=False)
+
+    # -- device pool -----------------------------------------------------
+    def _take(self, n: int) -> List:
+        grant, self._idle = self._idle[:n], self._idle[n:]
+        return grant
+
+    def _audit(self, tick: int) -> None:
+        """No device is ever double-granted or leaked: idle pool plus the
+        running tenants' pools is exactly the cluster pool, every tick."""
+        held = [d.id for d in self._idle]
+        for t in self._running:
+            held.extend(d.id for d in t.runner.devices)
+        if sorted(held) != self._pool_ids:
+            raise RuntimeError(
+                f"device accounting violated at tick {tick}: pool "
+                f"{self._pool_ids} vs held {sorted(held)}")
+
+    # -- scheduling ------------------------------------------------------
+    def _boost_pending(self) -> None:
+        """Paper: the pending job a shrink enables gets top priority."""
+        free = len(self._idle)
+        fitting = [t for t in self._pending if t.request()[0] <= free]
+        if fitting:
+            min(fitting, key=lambda t: (t.submit_step, t.jid)).boosted = True
+
+    def _start(self, t: _Tenant, p: int, tick: int) -> None:
+        t.rms = ClusterRMS(self, t)
+        t.runner = MalleableRunner(t.exec_app, t.params, t.rms,
+                                   devices=self._take(p), initial_procs=p,
+                                   max_model_axis=self.max_model_axis,
+                                   allow_partial=True)
+        if self.prewarm:
+            t.runner.prewarm()
+        t.state = t.runner.init()
+        t.start_tick = tick
+        t.start_procs = p
+        self._pending.remove(t)
+        self._running.append(t)
+
+    def _try_schedule(self, tick: int) -> None:
+        if not self._pending:
+            return
+        if self.simwl is not None:
+            # replay: the simulated scheduler's start order and sizes,
+            # strictly — backfilling past a blocked head would deviate
+            order = sorted(self._pending,
+                           key=lambda t: self.simwl.start_order.get(
+                               t.jid, 1 << 30))
+            for t in order:
+                p = self.simwl.start_procs.get(t.jid, t.params.preferred)
+                if p > len(self._idle):
+                    break
+                self._start(t, p, tick)
+            return
+        order = sorted(self._pending,
+                       key=lambda t: self.policy.priority_key(t, float(tick)))
+        for t in order:
+            lo, hi = t.request()
+            free = len(self._idle)
+            if t.moldable and free >= lo:
+                self._start(t, min(free, hi), tick)
+            elif not t.moldable and free >= hi:
+                self._start(t, hi, tick)
+            elif not self.policy.backfill:
+                break
+
+    # -- the per-query decision (ClusterRMS calls back here) ------------
+    def _decide(self, t: _Tenant, step: int, current: int,
+                params: MalleabilityParams) -> Action:
+        if self.simwl is not None:
+            act = self.simwl.pending_action(t.jid, step)
+            if act is None:
+                return Action.none(current)
+            if act.target > current:
+                need = act.target - current
+                if need > len(self._idle):
+                    return Action.none(current)     # defer until devices free
+                t.runner.grant_devices(self._take(need))
+            self.simwl.consume(t.jid)
+            return act
+        view = live_view(
+            available=len(self._idle),
+            pending_min_sizes=[p.request()[0] for p in self._pending],
+            tenants=self._running, exclude=t)
+        act = self.policy.decide(current, params, view, job=t)
+        if act.kind == "none":
+            return Action.none(current)
+        target = params.clamp(act.target)
+        if target == current:
+            return Action.none(current)
+        if target > current:
+            need = target - current
+            if need > len(self._idle):
+                return Action.none(current)         # view raced; be safe
+            t.runner.grant_devices(self._take(need))
+            return Action("expand", target)
+        return Action("shrink", target)
+
+    # -- main loop -------------------------------------------------------
+    def _tick_tenant(self, t: _Tenant, tick: int) -> bool:
+        """Advance one tenant by one tick; True iff it completed."""
+        r = t.runner
+        if t.malleable:
+            if t.step < t.steps:
+                t.state = r.maybe_reconfig(t.state, t.step)
+            elif self.simwl is not None and self.simwl.unconsumed(t.jid):
+                # completion boundary with an unreplayed trail: drive the
+                # connector directly (the runner's per-step query guard
+                # would suppress a repeat query at the same iteration)
+                act = t.rms.query(step=t.step, current=r.current,
+                                  params=t.params)
+                if act.kind != "none":
+                    t.state = r.apply_resize(t.state, t.steps - 1, act)
+            if r.current < len(r.devices):          # shrink: reclaim the tail
+                self._idle.extend(r.release_devices())
+                self._boost_pending()
+        if t.step < t.steps:
+            t.state, _ = r.step(t.state, t.step)
+            t.step += 1
+        if t.step >= t.steps and not (self.simwl is not None
+                                      and self.simwl.unconsumed(t.jid)):
+            t.end_tick = tick + 1
+            self._idle.extend(r.shutdown())
+            return True
+        return False
+
+    def run(self) -> ClusterResult:
+        t0 = time.perf_counter()
+        for t in self.tenants:                   # re-runnable: fresh state
+            t.runner = None
+            t.rms = None
+            t.state = None
+            t.step = 0
+            t.boosted = False
+            t.start_tick = -1
+            t.end_tick = -1
+            t.start_procs = 0
+        if self.simwl is not None:
+            self.simwl.reset()
+        self._idle: List = list(self.devices)
+        self._pending: List[_Tenant] = []
+        self._running: List[_Tenant] = []
+        done: List[_Tenant] = []
+        arrivals = sorted(self.tenants, key=lambda t: (t.submit_step, t.jid))
+        ai = 0
+        # the clock starts at the first arrival (makespan is "first
+        # arrival -> last completion", matching SimResult — ticks before
+        # any job exists are dead time, not schedule quality)
+        start = arrivals[0].submit_step if arrivals else 0
+        tick = start
+        pool = len(self.devices)
+        alloc_ticks = 0.0
+        energy_ws = 0.0
+        timeline: Dict[str, List] = {"tick": [], "allocated": [],
+                                     "running": [], "completed": []}
+        while len(done) < len(self.tenants):
+            if tick - start >= self.max_ticks:
+                raise RuntimeError(
+                    f"cluster stalled: {len(done)}/{len(self.tenants)} jobs "
+                    f"after {tick - start} ticks (deferred cosim expands, "
+                    f"or a pending job that never fits?)")
+            while ai < len(arrivals) and arrivals[ai].submit_step <= tick:
+                self._pending.append(arrivals[ai])
+                ai += 1
+            self._try_schedule(tick)
+            for t in list(self._running):
+                if self._tick_tenant(t, tick):
+                    self._running.remove(t)
+                    done.append(t)
+            allocated = pool - len(self._idle)
+            alloc_ticks += allocated
+            energy_ws += (allocated * self.loaded_w +
+                          len(self._idle) * self.idle_w) * self.tick_s
+            timeline["tick"].append(tick)
+            timeline["allocated"].append(allocated)
+            timeline["running"].append(len(self._running))
+            timeline["completed"].append(len(done))
+            self._audit(tick)
+            tick += 1
+
+        events_by_jid = {t.jid: t.runner.events for t in done}
+        n_resizes = sum(len(ev) for ev in events_by_jid.values())
+        records = [JobRecord(
+            jid=t.jid, name=t.app.name, submit_step=t.submit_step,
+            start_tick=t.start_tick, end_tick=t.end_tick,
+            start_procs=t.start_procs, final_procs=t.runner.current,
+            resizes=[(e.action, e.from_procs, e.to_procs)
+                     for e in t.runner.events])
+            for t in sorted(done, key=lambda x: x.jid)]
+        makespan = tick - start
+        return ClusterResult(
+            records=records, makespan_ticks=makespan,
+            alloc_rate=alloc_ticks / (pool * makespan) if makespan else 0.0,
+            energy_kwh=energy_ws / 3.6e6,
+            n_resizes=n_resizes, tick_s=self.tick_s,
+            wall_s=time.perf_counter() - t0,
+            events_by_jid=events_by_jid, timeline=timeline)
+
+    def crosscheck(self, result: ClusterResult) -> Dict[int, List]:
+        """cosim mode: verify every runner's resize trail against the
+        simulator's ``resize_log`` (raises ``ValueError`` on divergence)."""
+        if self.simwl is None:
+            raise ValueError("crosscheck needs decisions='cosim'")
+        return self.simwl.crosscheck(result.events_by_jid)

@@ -37,17 +37,32 @@ class RMSConnector(Protocol):
 
 
 class ScriptedRMS:
-    """Fixed ``{step: target_size}`` schedule."""
+    """Fixed ``{step: target_size}`` schedule.
+
+    Entries are consumed *in step order*, each firing at the first query
+    with ``step >=`` its key: a resize whose exact step lands inside the
+    runner's ``sched_iterations`` / ``sched_period_s`` inhibitor window
+    (``maybe_reconfig`` never issues a query there) is deferred to the
+    next query instead of silently dropped.  At most one entry fires per
+    query — one decision per DMR_RECONFIG point — so several overdue
+    entries drain across consecutive queries, still in order.
+    """
 
     def __init__(self, schedule: Dict[int, int]):
         self.schedule = dict(schedule)
+        self._consumed: set = set()
 
     def query(self, *, step: int, current: int,
               params: MalleabilityParams) -> Action:
-        tgt = self.schedule.get(step)
-        if tgt is None or tgt == current:
+        # ``schedule`` stays the live lookup table (it may be mutated
+        # after construction); consumed keys are tracked separately
+        due = [k for k in self.schedule
+               if k not in self._consumed and k <= step]
+        if not due:
             return Action.none(current)
-        tgt = params.clamp(tgt)
+        key = min(due)
+        self._consumed.add(key)
+        tgt = params.clamp(self.schedule[key])
         if tgt == current:
             return Action.none(current)
         return Action("expand" if tgt > current else "shrink", tgt)
@@ -69,33 +84,41 @@ class PolicyRMS:
 
 
 class FileRMS:
-    """Reads ``{"target": N}`` from a JSON file when its mtime changes.
+    """Reads ``{"target": N}`` from a JSON file when its content changes.
 
     Malformed or mid-write files are treated as "no decision yet"
-    (``Action.none``): the mtime watermark only advances once a file parses,
-    so a command written non-atomically is picked up on a later query
+    (``Action.none``): the watermark only advances once a file parses, so
+    a command written non-atomically is picked up on a later query
     instead of crashing the training loop.
+
+    The watermark is the triple ``(st_mtime_ns, st_size, payload)`` — a
+    bare ``st_mtime`` watermark drops the second of two decisions written
+    within one mtime granularity tick (whole seconds on coarse
+    filesystems), and even ``st_mtime_ns`` can collide across a fast
+    overwrite, so the payload itself is the tie-breaker.
     """
 
     def __init__(self, path: str):
         self.path = path
-        self._mtime = 0.0
+        self._seen: Optional[tuple] = None     # (mtime_ns, size, payload)
 
     def query(self, *, step: int, current: int,
               params: MalleabilityParams) -> Action:
         try:
-            mtime = os.stat(self.path).st_mtime
-        except FileNotFoundError:
-            return Action.none(current)
-        if mtime <= self._mtime:
-            return Action.none(current)
-        try:
+            st = os.stat(self.path)
             with open(self.path) as f:
-                cmd = json.load(f)
+                payload = f.read()
+        except OSError:
+            return Action.none(current)
+        sig = (st.st_mtime_ns, st.st_size, payload)
+        if sig == self._seen:
+            return Action.none(current)        # already applied
+        try:
+            cmd = json.loads(payload)
             tgt = params.clamp(int(cmd.get("target", current)))
-        except (OSError, ValueError, TypeError, AttributeError):
-            return Action.none(current)    # malformed / mid-write: retry
-        self._mtime = mtime
+        except (ValueError, TypeError, AttributeError):
+            return Action.none(current)        # malformed / mid-write: retry
+        self._seen = sig
         if tgt == current:
             return Action.none(current)
         return Action("expand" if tgt > current else "shrink", tgt)

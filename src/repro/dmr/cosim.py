@@ -1,4 +1,4 @@
-"""Co-simulation: a live runner driven by the cluster simulator's decisions.
+"""Co-simulation: live runners driven by the cluster simulator's decisions.
 
 ``SimRMS`` embeds a job inside the event-indexed discrete-event simulator
 (``repro.rms.scheduler``) and exposes that job's policy-driven resizes as an
@@ -20,6 +20,12 @@ simulator's ``resize_log`` record-for-record.
         state = dmr.reconfig(runner, state, i)
         state, _ = runner.step(state, i)
     simrms.crosscheck(runner.events)      # raises on any divergence
+
+``SimWorkload`` is the multi-tenant generalization: one simulator run over
+a *whole workload*, per-job resize schedules on each job's own iteration
+axis, start sizes/order as the simulated scheduler chose them, and a
+cluster-wide ``crosscheck``.  ``dmr.Cluster(..., decisions="cosim")``
+replays it with real co-scheduled runners on one device pool.
 """
 from __future__ import annotations
 
@@ -27,6 +33,29 @@ from typing import Dict, List, Optional, Tuple
 
 from repro.core.params import MalleabilityParams
 from repro.core.policy import Action
+
+
+def _normalize_schedule(schedule: List[Tuple], total_steps: int,
+                        jid) -> List[Tuple]:
+    """Make every schedule entry consumable: a runner issues at most one
+    query per step, so due steps must be strictly increasing and the k-th
+    entry from the end must leave k-1 later steps free.  Resizes that map
+    to the same iteration (or crowd the final steps) are spread
+    backward/forward without reordering."""
+    if len(schedule) > total_steps:
+        raise ValueError(
+            f"job {jid} resized {len(schedule)} times but has only "
+            f"{total_steps} steps; raise total_steps= (SimRMS) or "
+            f"max_steps= in materialize_live (dmr.Cluster cosim)")
+    out = list(schedule)
+    for k in range(len(out) - 1, -1, -1):          # leave room at the tail
+        cap = total_steps - (len(out) - k)
+        if out[k][0] > cap:
+            out[k] = (cap,) + out[k][1:]
+    for k in range(1, len(out)):                   # strictly increasing
+        if out[k][0] <= out[k - 1][0]:
+            out[k] = (out[k - 1][0] + 1,) + out[k][1:]
+    return out
 
 
 class SimRMS:
@@ -93,24 +122,7 @@ class SimRMS:
         self._cursor = 0
 
     def _normalize(self, schedule):
-        """Make every entry consumable: the runner issues at most one query
-        per step, so due steps must be strictly increasing and the k-th
-        entry from the end must leave k-1 later steps free.  Resizes that
-        map to the same iteration (or crowd the final steps) are spread
-        backward/forward without reordering."""
-        if len(schedule) > self.total_steps:
-            raise ValueError(
-                f"job {self.job.jid} resized {len(schedule)} times but has "
-                f"only {self.total_steps} steps; raise total_steps=")
-        out = list(schedule)
-        for k in range(len(out) - 1, -1, -1):      # leave room at the tail
-            cap = self.total_steps - (len(out) - k)
-            if out[k][0] > cap:
-                out[k] = (cap,) + out[k][1:]
-        for k in range(1, len(out)):               # strictly increasing
-            if out[k][0] <= out[k - 1][0]:
-                out[k] = (out[k - 1][0] + 1,) + out[k][1:]
-        return out
+        return _normalize_schedule(schedule, self.total_steps, self.job.jid)
 
     # ------------------------------------------------------------------
     @property
@@ -153,3 +165,103 @@ class SimRMS:
                 f"co-simulation divergence:\n  simulator resize_log: "
                 f"{want}\n  runner events:        {got}")
         return got
+
+
+class SimWorkload:
+    """Whole-workload co-simulation (the multi-tenant ``SimRMS``).
+
+    One simulator run over *all* jobs produces, per jid: the resize
+    schedule mapped onto that job's own iteration axis (``schedules``),
+    the start size the simulated scheduler granted (``start_procs`` — a
+    moldable job starts with whatever was free), and the start order
+    (``start_order``).  ``dmr.Cluster(..., decisions="cosim")`` replays
+    the whole thing with real runners; ``crosscheck`` then verifies every
+    runner's ``ResizeEvent`` trail against the one ``resize_log``,
+    jid by jid, under either engine.
+
+    ``total_steps`` maps jid -> live iteration count (the axis each job's
+    simulated resize times are projected onto).
+    """
+
+    def __init__(self, jobs: List, *, total_steps: Dict[int, int],
+                 config=None, policy=None, engine=None):
+        from repro.rms.scheduler import SimConfig, Simulator
+
+        cfg = config or SimConfig()
+        raw: Dict[int, List[Tuple[int, Action, object]]] = {}
+
+        def _listener(rec, j):
+            steps = total_steps.get(rec.jid)
+            if steps is None:
+                return
+            frac = min(max(1.0 - j.remaining_work, 0.0), 1.0)
+            due = min(int(frac * steps), steps - 1)
+            raw.setdefault(rec.jid, []).append(
+                (due, Action(rec.kind, rec.to_procs), rec))
+
+        sim = (engine or Simulator)(jobs, cfg, policy=policy,
+                                    resize_listener=_listener)
+        self.result = sim.run()
+        self.resize_log = self.result.resize_log
+        self.schedules = {jid: _normalize_schedule(s, total_steps[jid], jid)
+                          for jid, s in raw.items()}
+        self.start_procs: Dict[int, int] = {}
+        self.start_order: Dict[int, int] = {}
+        for rank, j in enumerate(sorted(self.result.jobs,
+                                        key=lambda x: (x.start_time, x.jid))):
+            self.start_order[j.jid] = rank
+            sched = self.schedules.get(j.jid)
+            # first resize's from_procs is the start size; a never-resized
+            # job keeps its start size in nprocs after the run
+            self.start_procs[j.jid] = sched[0][2].from_procs if sched \
+                else j.nprocs
+        self._cursors: Dict[int, int] = {jid: 0 for jid in self.schedules}
+
+    # -- replay interface (one consumer: dmr.Cluster) -------------------
+    def reset(self) -> None:
+        """Rewind every schedule cursor (a fresh replay)."""
+        self._cursors = {jid: 0 for jid in self.schedules}
+
+    def pending_action(self, jid: int, step: int) -> Optional[Action]:
+        """The next scheduled action for ``jid``, if due at ``step``
+        (``None`` otherwise).  Peek only — ``consume`` advances."""
+        sched = self.schedules.get(jid, ())
+        cur = self._cursors.get(jid, 0)
+        if cur >= len(sched) or step < sched[cur][0]:
+            return None
+        return sched[cur][1]
+
+    def consume(self, jid: int) -> None:
+        self._cursors[jid] += 1
+
+    def unconsumed(self, jid: int) -> int:
+        """Schedule entries not yet replayed (a tenant holds its
+        completion until its trail is fully consumed)."""
+        return len(self.schedules.get(jid, ())) - self._cursors.get(jid, 0)
+
+    # -- verification ----------------------------------------------------
+    def expected_resizes(self, jid: int) -> List[Tuple[str, int, int]]:
+        return [(r.kind, r.from_procs, r.to_procs)
+                for r in self.resize_log if r.jid == jid]
+
+    def crosscheck(self, events_by_jid: Dict[int, List]) -> Dict[int, List]:
+        """Verify per-job runner events against the simulator's resize_log.
+
+        ``events_by_jid`` maps jid -> ``ResizeEvent`` list (what
+        ``ClusterResult.events_by_jid`` holds).  Raises ``ValueError``
+        naming every diverging jid; returns the matched per-jid
+        ``(kind, from, to)`` lists."""
+        jids = sorted(set(events_by_jid) | {r.jid for r in self.resize_log})
+        matched, diverged = {}, []
+        for jid in jids:
+            got = [(e.action, e.from_procs, e.to_procs)
+                   for e in events_by_jid.get(jid, [])]
+            want = self.expected_resizes(jid)
+            if got != want:
+                diverged.append(f"  jid {jid}: simulator {want} != "
+                                f"runner {got}")
+            matched[jid] = got
+        if diverged:
+            raise ValueError("workload co-simulation divergence:\n"
+                             + "\n".join(diverged))
+        return matched

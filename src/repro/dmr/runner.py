@@ -73,18 +73,31 @@ class MalleableRunner:
                  max_model_axis: int = 16,
                  policy=None,
                  cluster_view: Optional[Callable[[], ClusterView]] = None,
-                 initial_procs: Optional[int] = None):
+                 initial_procs: Optional[int] = None,
+                 allow_partial: bool = False):
         self.app = ensure_app(app)
         self.params = params
         self.devices = list(devices) if devices is not None else jax.devices()
-        assert len(self.devices) >= params.max_procs, (
-            f"need {params.max_procs} workers, have {len(self.devices)}")
         self.patterns = patterns if patterns is not None \
             else getattr(self.app, "patterns", None)
         self._custom_redistribute = redistribute
         self.max_model_axis = max_model_axis
         self.current = params.clamp(initial_procs) \
             if initial_procs is not None else params.preferred
+        # ``allow_partial``: the pool may start below max_procs (under
+        # dmr.Cluster a job begins with whatever the scheduler granted and
+        # grows via grant_devices) — it only has to cover the starting
+        # size.  Standalone runners keep the fail-fast default: an
+        # undersized pool would otherwise silently collapse every expand.
+        if len(self.devices) < self.current:
+            raise ValueError(
+                f"need {self.current} workers to start, have "
+                f"{len(self.devices)} devices in the pool")
+        if not allow_partial and len(self.devices) < params.max_procs:
+            raise ValueError(
+                f"device pool ({len(self.devices)}) cannot reach "
+                f"max_procs={params.max_procs}; pass allow_partial=True if "
+                f"the pool grows later via grant_devices (dmr.Cluster does)")
         rms = connect(rms)
         if rms is None:
             # policy selection: run a named/custom Policy locally against a
@@ -106,7 +119,35 @@ class MalleableRunner:
 
     # ------------------------------------------------------------------
     def _mesh_for(self, n: int):
+        if n > len(self.devices):
+            raise RuntimeError(
+                f"cannot build a {n}-worker mesh: only {len(self.devices)} "
+                f"devices in the live pool (shrunk by handle_failure, or a "
+                f"partial dmr.Cluster grant?) — a still-legal size must be "
+                f"clamped to the pool before building its mesh")
         return make_job_mesh(self.devices[:n], max_model=self.max_model_axis)
+
+    def _pool_clamp(self, target: int) -> int:
+        """Largest legal size that both satisfies ``params`` and fits the
+        *live* device pool (which may have shrunk below ``max_procs``).
+
+        A target beyond the pool collapses to the current size when
+        nothing larger fits (an unhonorable expand is a no-op, never an
+        accidental shrink); only when the current size itself no longer
+        fits (mid-``handle_failure``) does it fall to the largest legal
+        size below."""
+        pool = len(self.devices)
+        if target <= pool:
+            return target
+        best = max((s for s in self.params.legal_sizes() if s <= pool),
+                   default=0)
+        if best <= self.current <= pool:
+            return self.current
+        if not best:
+            raise RuntimeError(
+                f"no legal size fits the live pool: {pool} devices < "
+                f"min_procs={self.params.min_procs}")
+        return best
 
     def _step_fn(self, n: int) -> Callable:
         if n not in self._step_cache:
@@ -119,12 +160,47 @@ class MalleableRunner:
     def prewarm(self, sizes: Optional[List[int]] = None):
         """AOT-compile candidate meshes (min/pref/max by default) so a later
         resize costs only the state transfer — the TPU analogue of hiding
-        MPI_Comm_spawn latency (DESIGN.md §6). Returns seconds spent."""
+        MPI_Comm_spawn latency (DESIGN.md §6). Returns seconds spent.
+
+        Candidates are clamped to the *live* pool: a size that no longer
+        fits (post-failure, or under a partial Cluster grant) is skipped
+        rather than silently compiled against an undersized mesh."""
         t0 = time.perf_counter()
+        pool = len(self.devices)
         for n in sizes or [self.params.min_procs, self.params.preferred,
                            self.params.max_procs]:
-            self._step_fn(self.params.clamp(n))
+            n = self.params.clamp(n)
+            if n <= pool:
+                self._step_fn(n)
         return time.perf_counter() - t0
+
+    # -- device pool management (the dmr.Cluster contract) -------------
+    def grant_devices(self, new_devices: List) -> None:
+        """Extend the live pool (Cluster expand path).  The grant may be
+        non-contiguous — any devices the cluster has idle.  Appending
+        preserves the ``devices[:n]`` prefix every cached executable was
+        built on, so existing compilations stay valid."""
+        ids = {d.id for d in self.devices}
+        dup = [d.id for d in new_devices if d.id in ids]
+        if dup:
+            raise ValueError(f"devices {dup} already in this runner's pool")
+        self.devices.extend(new_devices)
+
+    def release_devices(self) -> List:
+        """Trim the live pool to the current size, returning the released
+        tail (Cluster reclaims it after a shrink).  Cached executables for
+        sizes beyond the new pool are dropped — their meshes are stale."""
+        released = self.devices[self.current:]
+        self.devices = self.devices[:self.current]
+        for n in [k for k in self._step_cache if k > self.current]:
+            del self._step_cache[n]
+        return released
+
+    def shutdown(self) -> List:
+        """Release the whole pool (job complete); returns every device."""
+        released, self.devices = self.devices, []
+        self._step_cache.clear()
+        return released
 
     # ------------------------------------------------------------------
     def maybe_reconfig(self, state, step: int):
@@ -155,13 +231,16 @@ class MalleableRunner:
                      force: bool = False):
         """Expand/shrink to action.target: reshard state, swap executable.
 
-        The target is re-checked after ``params.clamp``: a clamped action
-        that collapses to the current size is a no-op — no redistribution
-        runs and no ResizeEvent is logged.  ``force=True`` overrides the
-        guard for same-size *migrations* (the device set changed under the
-        job, e.g. after a failure), which do move state and are logged.
+        The target is re-checked after ``params.clamp`` — and clamped to
+        the *live* device pool, which may have shrunk below ``max_procs``
+        (handle_failure) or not yet cover it (a partial Cluster grant): a
+        clamped action that collapses to the current size is a no-op — no
+        redistribution runs and no ResizeEvent is logged.  ``force=True``
+        overrides the guard for same-size *migrations* (the device set
+        changed under the job, e.g. after a failure), which do move state
+        and are logged.
         """
-        target = self.params.clamp(action.target)
+        target = self._pool_clamp(self.params.clamp(action.target))
         if target == self.current and not force:
             return state
         new_mesh = self._mesh_for(target)

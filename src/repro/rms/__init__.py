@@ -5,9 +5,10 @@ from repro.rms.scheduler import (ReferenceSimulator, ResizeRecord, SimConfig,
                                  SimResult, Simulator, Timeline)
 from repro.rms.workload import (APPS, MOLDABLE, RIGID, SCENARIOS,
                                 SUBMISSION_MODES, AppProfile, Job,
-                                bursty_arrivals, feitelson_arrivals,
-                                generate_synthetic_swf, make_scenario,
-                                make_workload, parse_swf)
+                                LiveJobSpec, bursty_arrivals,
+                                feitelson_arrivals, generate_synthetic_swf,
+                                make_scenario, make_workload,
+                                materialize_live, parse_swf)
 
 __all__ = ["SimConfig", "SimResult", "Simulator", "ReferenceSimulator",
            "Timeline", "ResizeRecord",
@@ -15,5 +16,6 @@ __all__ = ["SimConfig", "SimResult", "Simulator", "ReferenceSimulator",
            "RIGID", "MOLDABLE", "SUBMISSION_MODES", "SCENARIOS",
            "bursty_arrivals", "make_scenario",
            "parse_swf", "generate_synthetic_swf",
+           "LiveJobSpec", "materialize_live",
            "Policy", "BasePolicy", "Algorithm2Policy", "EnergyAwarePolicy",
            "ThroughputGreedyPolicy", "POLICIES", "get_policy"]

@@ -46,7 +46,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from repro.core.policy import ClusterView, Policy, get_policy
+from repro.core.policy import ClusterView, Policy, get_policy, live_view
 from repro.rms.workload import Job
 
 
@@ -483,13 +483,11 @@ class ReferenceSimulator(_SimulatorBase):
         for j in sorted(self.running, key=lambda x: x.next_reconfig_ok):
             if not j.malleable or self.now < j.next_reconfig_ok:
                 continue
-            reclaimable = sum(
-                max(0, o.nprocs - o.app.params.preferred)
-                for o in self.running if o.malleable and o is not j)
-            view = ClusterView(
+            # one live-view definition shared with dmr.Cluster
+            view = live_view(
                 available=self.free,
                 pending_min_sizes=[p.request()[0] for p in self.pending],
-                reclaimable_others=reclaimable)
+                tenants=self.running, exclude=j)
             self._consider(j, view)
 
 

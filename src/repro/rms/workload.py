@@ -461,3 +461,90 @@ def make_scenario(name: str, n_jobs: int = 120, *, mode: str = MOLDABLE,
         raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}"
                        " (or 'trace:<path.swf>' / 'trace:synthetic')")
     return fn(n_jobs, mode, malleable, seed)
+
+
+# ======================================================================
+# Live materialization: scenario -> dmr.Cluster workload
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class LiveJobSpec:
+    """One job of a *live* workload (``dmr.Cluster`` input): a scenario
+    job scaled onto a real device pool and the cluster-step clock.
+
+    ``app`` is the cost/priority model (``exec_time``, ``state_mb``) the
+    scheduling policy consults; the executable the job actually runs is
+    attached by the cluster (an explicit ``dmr.App`` or its
+    ``app_factory``).  ``params`` are the job's original malleability
+    parameters clamped to the device pool; ``steps`` is the scaled-down
+    iteration count; ``submit_step`` the cluster tick of arrival."""
+    jid: int
+    app: AppProfile
+    params: MalleabilityParams
+    submit_step: int
+    steps: int
+    moldable: bool
+    malleable: bool
+
+
+def materialize_live(scenario, n_jobs: Optional[int] = None, *,
+                     device_count: int = 8,
+                     max_steps: int = 24, arrival_span: Optional[int] = None,
+                     inhibit_iterations: Optional[int] = None,
+                     mode: str = MOLDABLE, malleable: bool = True,
+                     seed: int = 0) -> List[LiveJobSpec]:
+    """Scenario -> live-job materialization (the ``dmr.Cluster`` input).
+
+    Takes any ``make_scenario`` name (or a prebuilt ``Job`` list) and
+    scales it down to live size: worker limits scale *proportionally*
+    onto ``device_count`` (an app whose upper limit is halved keeps its
+    preferred size at the same fraction of it — merely clamping would
+    push most preferred sizes onto the new maximum and leave Algorithm 2,
+    which never shrinks below preferred, nothing to arbitrate), iteration
+    counts are capped at ``max_steps`` (real steps execute — Table-4
+    counts in the tens of thousands would take hours live), and submit
+    *times* map proportionally onto an ``arrival_span``-tick cluster
+    clock (default ``n_jobs * max_steps // 3`` ticks, which keeps
+    several jobs in flight at once).
+
+    Wall-clock inhibitors make no sense on the tick clock, so each app's
+    §3.2 inhibitor is re-expressed in iterations: ``inhibit_iterations``
+    if given, else 2 for apps that declared any inhibitor and 0 otherwise.
+    """
+    # n_jobs defaults to 8 for a scenario name and to the whole list for
+    # prebuilt jobs — an explicitly supplied workload is never silently
+    # truncated
+    if isinstance(scenario, str):
+        jobs, _ = make_scenario(scenario, n_jobs if n_jobs is not None
+                                else 8, mode=mode, malleable=malleable,
+                                seed=seed)
+    else:
+        jobs = list(scenario)
+    jobs = sorted(jobs, key=lambda j: (j.submit_time, j.jid))
+    if n_jobs is not None:
+        jobs = jobs[:n_jobs]
+    t_max = max((j.submit_time for j in jobs), default=0.0) or 1.0
+    span = arrival_span if arrival_span is not None \
+        else max(1, len(jobs) * max_steps // 3)
+    specs = []
+    for j in jobs:
+        p = j.app.params
+        hi = max(1, min(p.max_procs, device_count))
+        scale = hi / p.max_procs
+        if scale < 1.0:
+            lo = max(1, min(hi, round(p.min_procs * scale) or 1))
+            pref = min(hi, max(lo, round(p.preferred * scale) or 1))
+        else:
+            lo = min(p.min_procs, hi)
+            pref = min(max(p.preferred, lo), hi)
+        inhibit = inhibit_iterations if inhibit_iterations is not None \
+            else (2 if (p.sched_period_s or p.sched_iterations) else 0)
+        specs.append(LiveJobSpec(
+            jid=j.jid,
+            app=j.app,
+            params=MalleabilityParams(lo, hi, pref,
+                                      sched_iterations=inhibit),
+            submit_step=int(round(j.submit_time / t_max * span)),
+            steps=max(4, min(max_steps, j.app.iterations)),
+            moldable=j.moldable, malleable=j.malleable))
+    return specs

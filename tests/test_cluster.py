@@ -1,0 +1,244 @@
+"""dmr.Cluster — the live multi-tenant elastic runtime.
+
+Stub-mesh tests (no device farm): meshes are replaced by their worker
+count and apps carry a tiny host pytree, so these exercise exactly the
+cluster machinery — device accounting, queueing/backfill, policy-driven
+resizes through ClusterRMS, and the workload-wide co-simulation
+crosscheck.  The real-JAX end-to-end run lives in benchmarks/live_cluster
+(wired into CI's examples-smoke job).
+"""
+import jax.numpy as jnp
+import pytest
+
+import repro.dmr as dmr
+import repro.dmr.cluster as cluster_mod
+import repro.dmr.runner as runner_mod
+from repro.core.params import MalleabilityParams
+from repro.rms.scheduler import ReferenceSimulator, Simulator
+from repro.rms.workload import LiveJobSpec, materialize_live
+
+
+class _Dev:
+    def __init__(self, i):
+        self.id = i
+
+
+class _ToyApp:
+    def init_state(self, mesh):
+        return {"w": jnp.arange(4.0)}
+
+    def state_shardings(self, mesh):
+        return {"w": None}
+
+    def make_step(self, mesh):
+        return lambda s, i, *a: (s, {})
+
+
+@pytest.fixture(autouse=True)
+def _stub_meshes(monkeypatch):
+    monkeypatch.setattr(runner_mod, "make_job_mesh",
+                        lambda devices, max_model=16: ("mesh", len(devices)))
+
+
+def _pool(n=8):
+    return [_Dev(i) for i in range(n)]
+
+
+def _cluster(specs, n_devices=8, **kw):
+    kw.setdefault("app_factory", lambda spec: _ToyApp())
+    return dmr.Cluster(specs, devices=_pool(n_devices), **kw)
+
+
+def _specs(mode="moldable", malleable=True, n_jobs=8, seed=0, **kw):
+    return materialize_live("steady", n_jobs=n_jobs, device_count=8,
+                            max_steps=12, mode=mode, malleable=malleable,
+                            seed=seed, **kw)
+
+
+# ----------------------------------------------------------------------
+# live mode
+# ----------------------------------------------------------------------
+
+def test_live_cluster_runs_whole_workload_and_resizes():
+    res = _cluster(_specs(), policy="algorithm2").run()
+    assert len(res.records) == 8
+    assert all(r.start_tick >= r.submit_step for r in res.records)
+    assert all(r.end_tick > r.start_tick for r in res.records)
+    assert res.n_resizes > 0                     # co-tenancy forced resizes
+    kinds = [k for r in res.records for k, _, _ in r.resizes]
+    assert "shrink" in kinds                     # shrink-to-admit happened
+    s = res.summary()
+    assert s["throughput_jps"] > 0 and 0 < s["alloc_rate"] <= 1
+
+def test_cluster_run_is_reentrant():
+    """Regression: a second run() must reset tenant state (step counters,
+    runners, cosim cursors), not replay corrupted leftovers."""
+    cl = _cluster(_specs(), policy="algorithm2")
+    first = cl.run().summary()
+    second = cl.run().summary()
+    first.pop("wall_s"), second.pop("wall_s")
+    assert first == second
+    cc = _cluster(_specs(), policy="algorithm2", decisions="cosim")
+    cc.crosscheck(cc.run())
+    cc.crosscheck(cc.run())                      # cursors rewound
+
+
+def test_no_device_double_grant_and_full_reclaim():
+    cl = _cluster(_specs(), policy="throughput")
+    res = cl.run()                               # _audit runs every tick
+    # every device is back in the idle pool after the last completion
+    assert sorted(d.id for d in cl._idle) == cl._pool_ids
+    assert res.timeline["allocated"][-1] == 0
+    # and the audit itself trips on a double grant
+    cl._idle = _pool(8) + [_Dev(3)]
+    cl._running = []
+    with pytest.raises(RuntimeError, match="device accounting"):
+        cl._audit(0)
+
+
+def test_rigid_static_jobs_never_resize_live():
+    res = _cluster(_specs(mode="rigid", malleable=False),
+                   policy="algorithm2").run()
+    assert res.n_resizes == 0
+    assert all(r.resizes == [] for r in res.records)
+    # rigid submission: every job started at its full upper limit
+    assert all(r.start_procs == 8 for r in res.records)
+
+
+def test_inhibitors_honored_live(monkeypatch):
+    """A tenant with sched_iterations=k is queried at most every k steps."""
+    queries = {}
+    orig = cluster_mod.ClusterRMS.query
+
+    def spy(self, *, step, current, params):
+        queries.setdefault(self.tenant.jid, []).append(step)
+        return orig(self, step=step, current=current, params=params)
+
+    monkeypatch.setattr(cluster_mod.ClusterRMS, "query", spy)
+    specs = _specs(inhibit_iterations=3)
+    assert all(s.params.sched_iterations == 3 for s in specs)
+    _cluster(specs, policy="algorithm2").run()
+    assert queries, "no tenant ever queried its RMS"
+    for jid, steps in queries.items():
+        gaps = [b - a for a, b in zip(steps, steps[1:])]
+        assert all(g >= 3 for g in gaps), (jid, steps)
+
+
+def test_moldable_beats_rigid_static_throughput():
+    static = _cluster(_specs(mode="rigid", malleable=False)).run().summary()
+    for policy in ("algorithm2", "throughput"):
+        live = _cluster(_specs(), policy=policy).run().summary()
+        assert live["throughput_jps"] > static["throughput_jps"], policy
+
+
+def test_explicit_app_spec_tuples():
+    app = _ToyApp()
+    params = MalleabilityParams(2, 8, 4)
+    cl = _cluster([(app, params, 0), (app, params, 2)], default_steps=6)
+    res = cl.run()
+    assert [r.jid for r in res.records] == [0, 1]
+    assert all(r.end_tick - r.start_tick >= 6 for r in res.records)
+    # optional flags: rigid submission / non-malleable opt-outs
+    cl = _cluster([(app, params, 0, "rigid"),
+                   (app, params, 0, "moldable", False)], default_steps=6)
+    res = cl.run()
+    assert res.records[0].start_procs == 8       # rigid: upper limit
+    assert res.records[1].resizes == []          # non-malleable: untouched
+    with pytest.raises(ValueError, match="not 'rigid'/'moldable'"):
+        _cluster([(app, params, 0, "bogus")])
+
+
+def test_cluster_validation_errors():
+    app = _ToyApp()
+    with pytest.raises(ValueError, match="can never start"):
+        _cluster([(app, MalleabilityParams(16, 32, 16), 0)])
+    with pytest.raises(ValueError, match="decisions="):
+        _cluster(_specs(), decisions="bogus")
+    with pytest.raises(TypeError, match="workload entry"):
+        _cluster([42])
+    dup = _specs(n_jobs=2)
+    with pytest.raises(ValueError, match="duplicate jids"):
+        _cluster(dup + dup)
+
+
+# ----------------------------------------------------------------------
+# workload-wide co-simulation (decisions="cosim")
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", [Simulator, ReferenceSimulator])
+def test_cosim_replay_crosschecks_per_job_resize_logs(engine):
+    cl = _cluster(_specs(), policy="algorithm2", decisions="cosim",
+                  engine=engine)
+    assert cl.simwl.resize_log, "scenario produced no simulated resizes"
+    res = cl.run()
+    matched = cl.crosscheck(res)                 # raises on any divergence
+    assert sum(len(v) for v in matched.values()) == len(cl.simwl.resize_log)
+    assert res.n_resizes == len(cl.simwl.resize_log)
+    # replay honored the simulated scheduler's start sizes
+    for r in res.records:
+        assert r.start_procs == cl.simwl.start_procs[r.jid]
+
+
+def test_cosim_identical_resize_trails_across_engines():
+    trails = []
+    for engine in (Simulator, ReferenceSimulator):
+        cl = _cluster(_specs(), policy="algorithm2", decisions="cosim",
+                      engine=engine)
+        res = cl.run()
+        trails.append({jid: [(e.action, e.from_procs, e.to_procs)
+                             for e in ev]
+                       for jid, ev in res.events_by_jid.items()})
+    assert trails[0] == trails[1]
+
+
+def test_cosim_crosscheck_raises_on_divergence():
+    cl = _cluster(_specs(), policy="algorithm2", decisions="cosim")
+    res = cl.run()
+    tampered = dict(res.events_by_jid)
+    victim = next(jid for jid, ev in tampered.items() if ev)
+    tampered[victim] = []
+    with pytest.raises(ValueError, match="co-simulation divergence"):
+        cl.simwl.crosscheck(tampered)
+    with pytest.raises(ValueError, match="decisions='cosim'"):
+        _cluster(_specs()).crosscheck(res)
+
+
+# ----------------------------------------------------------------------
+# runner device-pool API (the Cluster contract)
+# ----------------------------------------------------------------------
+
+def _runner(n_devices=8, params=None, **kw):
+    return dmr.MalleableRunner(
+        _ToyApp(), params or MalleabilityParams(2, 8, 4),
+        dmr.ScriptedRMS({}), devices=_pool(n_devices), **kw)
+
+
+def test_grant_devices_rejects_duplicates_and_extends():
+    r = _runner(4, allow_partial=True)
+    r.grant_devices([_Dev(100), _Dev(101)])
+    assert len(r.devices) == 6
+    with pytest.raises(ValueError, match="already in this runner's pool"):
+        r.grant_devices([_Dev(100)])
+
+
+def test_release_devices_trims_to_current_and_drops_stale_cache():
+    r = _runner(8, initial_procs=8)
+    r.prewarm()
+    assert set(r._step_cache) == {2, 4, 8}
+    r.current = 4                                 # as if shrunk
+    released = r.release_devices()
+    assert len(released) == 4 and len(r.devices) == 4
+    assert set(r._step_cache) == {2, 4}           # 8-mesh executable stale
+    assert r.shutdown() and r.devices == [] and r._step_cache == {}
+
+
+def test_partial_pool_runner_start():
+    # standalone runners keep the fail-fast default; under dmr.Cluster
+    # (allow_partial=True) a runner may start with fewer devices than
+    # max_procs — it only has to cover the starting size
+    with pytest.raises(ValueError, match="allow_partial"):
+        _runner(4, initial_procs=4)
+    r = _runner(4, initial_procs=4, allow_partial=True)
+    assert r.current == 4
+    with pytest.raises(ValueError, match="to start"):
+        _runner(2, initial_procs=4, allow_partial=True)

@@ -169,6 +169,82 @@ def test_connect_factory():
         dmr.connect(42)
 
 
+def test_scripted_rms_defers_into_inhibitor_window():
+    """Regression: a schedule key landing inside the sched_iterations /
+    sched_period_s inhibitor window (maybe_reconfig issues no query at
+    that exact step) must fire at the next query, not silently drop."""
+    params = MalleabilityParams(2, 8, 4, sched_iterations=2)
+    rms = dmr.ScriptedRMS({3: 8})
+    # the runner queries at steps 0, 2, 4, ... — never exactly at 3
+    assert rms.query(step=0, current=4, params=params).kind == "none"
+    assert rms.query(step=2, current=4, params=params).kind == "none"
+    act = rms.query(step=4, current=4, params=params)
+    assert (act.kind, act.target) == ("expand", 8)
+    # consumed: it does not re-fire
+    assert rms.query(step=6, current=8, params=params).kind == "none"
+
+
+def test_scripted_rms_drains_overdue_entries_in_order():
+    params = MalleabilityParams(2, 8, 4)
+    rms = dmr.ScriptedRMS({5: 4, 1: 8, 2: 2})    # dict order irrelevant
+    got = [rms.query(step=10, current=c, params=params)
+           for c in (4, 8, 2)]
+    assert [(a.kind, a.target) for a in got] == \
+        [("expand", 8), ("shrink", 2), ("expand", 4)]
+
+
+def test_runner_inhibitor_window_defers_scripted_resize():
+    """End-to-end: sched_iterations=2 suppresses the query at the exact
+    scheduled step; the resize lands at the next query instead."""
+    import unittest.mock as mock
+
+    import repro.dmr.runner as runner_mod
+
+    class _Dev:
+        def __init__(self, i): self.id = i
+
+    class _App:
+        def init_state(self, mesh): return {"w": jnp.zeros(4)}
+        def state_shardings(self, mesh): return {"w": None}
+        def make_step(self, mesh): return lambda s, i: (s, {})
+
+    with mock.patch.object(runner_mod, "make_job_mesh",
+                           lambda devices, max_model=16: len(devices)):
+        r = dmr.MalleableRunner(
+            _App(), dmr.set_parameters(2, 8, 4, sched_iterations=2),
+            dmr.connect({3: 2}), devices=[_Dev(i) for i in range(8)],
+            redistribute=lambda s, sh: (s, dmr.TransferStats(0, 0.0, 1)),
+            initial_procs=8)
+        s = r.init()
+        for i in range(6):                       # queries at steps 0, 2, 4
+            s = dmr.reconfig(r, s, i)
+        assert [(e.step, e.action, e.to_procs) for e in r.events] == \
+            [(4, "shrink", 2)]
+
+
+def test_file_rms_same_mtime_tick_second_write(tmp_path):
+    """Regression: two decisions written within one mtime granularity
+    tick (identical st_mtime_ns and st_size) — the second must not be
+    dropped by the watermark."""
+    import os
+
+    p = tmp_path / "cmd.json"
+    params = MalleabilityParams(2, 8, 4)
+    rms = dmr.FileRMS(str(p))
+    t = (1_000_000_000, 1_000_000_000)
+    p.write_text('{"target": 8}')
+    os.utime(p, ns=t)
+    act = rms.query(step=0, current=4, params=params)
+    assert (act.kind, act.target) == ("expand", 8)
+    # second command: same byte size, forced-identical mtime_ns
+    p.write_text('{"target": 2}')
+    os.utime(p, ns=t)
+    act = rms.query(step=1, current=8, params=params)
+    assert (act.kind, act.target) == ("shrink", 2)
+    # genuinely unchanged file: not re-applied
+    assert rms.query(step=2, current=2, params=params).kind == "none"
+
+
 def test_file_rms_malformed_json_is_none(tmp_path):
     """Regression: a malformed / mid-write command file must not crash the
     training loop — and a later valid write must still be picked up."""

@@ -93,6 +93,28 @@ def test_failure_keeping_current_size_migrates(monkeypatch):
     assert xfers, "state was not migrated onto the survivor mesh"
 
 
+def test_prewarm_after_failure_skips_oversized_meshes(monkeypatch):
+    """Regression: after handle_failure shrinks the pool (or under a
+    partial dmr.Cluster grant), prewarm()/apply_resize to a still-'legal'
+    size must not silently build an undersized mesh."""
+    from repro.core.policy import Action
+
+    r, xfers = _runner(monkeypatch)
+    state = r.init()
+    state = r.handle_failure(state, step=1, failed_devices=r.devices[3:])
+    assert len(r.devices) == 3 and r.current == 2
+    r.prewarm()                        # 4 and 8 no longer fit: skipped
+    assert set(r._step_cache) == {2}
+    with pytest.raises(RuntimeError, match="live pool"):
+        r._mesh_for(8)
+    # an RMS-driven expand beyond the live pool collapses to a no-op
+    # (never an undersized mesh, never an accidental shrink)
+    out = r.apply_resize(state, step=2, action=Action("expand", 8))
+    assert out is state
+    assert r.current == 2
+    assert len(r.events) == 1          # only the failure shrink was logged
+
+
 def test_clamped_noop_action_is_guarded(monkeypatch):
     """Regression: a clamped Action whose target collapses to the current
     size must neither redistribute nor log a ResizeEvent."""
