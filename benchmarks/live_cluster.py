@@ -15,16 +15,30 @@ Every malleable config must beat the rigid-static baseline on completed
 jobs/s (asserted).  Metrics land in ``experiments/bench/live_cluster.csv``
 and ``BENCH_live_cluster.json`` (the CI artifact).
 
-    PYTHONPATH=src python -m benchmarks.live_cluster           # default
-    PYTHONPATH=src python -m benchmarks.live_cluster --smoke   # CI-sized
+``--replay`` switches to the trace-scale scheduling benchmark: an SWF
+trace (synthetic via ``generate_synthetic_swf``, or ``--trace path.swf``)
+is parsed with ``parse_swf``, materialized with ``materialize_live`` and
+driven through ``Cluster.sched_only`` — no JAX anywhere — measuring the
+event engine against ``ReferenceCluster`` (asserting bit-identical
+results and recording the speedup + peak RSS), a cosim crosscheck
+replay, and an event-engine-only run at 1M jobs.  Results merge into
+``BENCH_live_cluster.json`` under ``"replay"``.
+
+    PYTHONPATH=src python -m benchmarks.live_cluster                # default
+    PYTHONPATH=src python -m benchmarks.live_cluster --smoke        # CI-sized
+    PYTHONPATH=src python -m benchmarks.live_cluster --replay       # 100k/1M
+    PYTHONPATH=src python -m benchmarks.live_cluster --replay-smoke # CI-sized
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
+import resource
 import subprocess
 import sys
+import time
 
 from benchmarks.common import report, timer, write_csv
 
@@ -174,6 +188,117 @@ def run(n_jobs=10, max_steps=16, seed=0):
     return rows
 
 
+# ----------------------------------------------------------------------
+# trace-scale replay (scheduling only, no JAX): event vs reference
+# ----------------------------------------------------------------------
+
+def _peak_rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _replay_specs(n_jobs, seed, *, trace=None, max_steps=4):
+    """SWF trace -> parse_swf -> materialize_live, ready for sched_only."""
+    from repro.rms.workload import (generate_synthetic_swf, materialize_live,
+                                    parse_swf)
+    source = trace if trace else generate_synthetic_swf(n_jobs, seed=seed)
+    jobs, overrides = parse_swf(source, max_jobs=n_jobs)
+    nodes = overrides["nodes"]
+    # compressed arrival span: the queue must stay contended — an idle
+    # scheduler measures tenant stepping, not the queue indexes
+    specs = materialize_live(jobs, device_count=nodes, max_steps=max_steps,
+                             arrival_span=max(1, len(jobs) * max_steps // 12))
+    return specs, nodes
+
+
+def _replay_once(engine_cls, specs, nodes, **kw):
+    import repro.dmr as dmr
+    cls = {"event": dmr.Cluster, "reference": dmr.ReferenceCluster}[engine_cls]
+    cl = cls.sched_only([dataclasses.replace(s) for s in specs],
+                        n_devices=nodes, policy="algorithm2",
+                        record_timeline=False, audit=False,
+                        max_ticks=50_000_000, **kw)
+    t0 = time.perf_counter()
+    res = cl.run()
+    return cl, res, time.perf_counter() - t0
+
+
+def _replay_identical(a, b):
+    sa, sb = a.summary(), b.summary()
+    sa.pop("wall_s"), sb.pop("wall_s")
+    recs = lambda r: [(x.jid, x.start_tick, x.end_tick, x.start_procs,
+                       x.final_procs, tuple(x.resizes)) for x in r.records]
+    return sa == sb and recs(a) == recs(b)
+
+
+def run_replay(speedup_jobs=100_000, million_jobs=1_000_000,
+               crosscheck_jobs=20_000, seed=0, trace=None):
+    """The tentpole benchmark: event-cluster trace replay.
+
+    * ``speedup_jobs``: both engines replay the same materialized trace;
+      results must be bit-identical and the wall-clock ratio is the
+      headline speedup.
+    * ``crosscheck_jobs``: the event engine replays the simulator's
+      decisions (``decisions="cosim"``) and every resize trail is
+      verified against the simulator's resize_log.
+    * ``million_jobs``: event engine only, end-to-end scale proof
+      (``0`` skips it — the smoke configuration).
+    """
+    t_start = time.perf_counter()
+    payload = {}
+
+    specs, nodes = _replay_specs(speedup_jobs, seed, trace=trace)
+    _, ev_res, ev_s = _replay_once("event", specs, nodes)
+    _, rf_res, rf_s = _replay_once("reference", specs, nodes)
+    assert _replay_identical(ev_res, rf_res), (
+        "cluster engines diverged — run tests/test_cluster_equivalence")
+    payload["engine_speedup"] = {
+        "n_jobs": len(specs), "nodes": nodes,
+        "event_s": round(ev_s, 3), "reference_s": round(rf_s, 3),
+        "speedup": round(rf_s / ev_s, 1),
+        "jobs_per_s": round(len(specs) / ev_s, 1),
+        "makespan_ticks": ev_res.makespan_ticks,
+        "n_resizes": ev_res.n_resizes,
+        "bit_identical": True,
+    }
+    derived = [f"speedup:{payload['engine_speedup']['speedup']}x"
+               f"@{len(specs)}jobs"]
+
+    xs, xn = _replay_specs(crosscheck_jobs, seed, trace=trace)
+    xcl, xres, _ = _replay_once("event", xs, xn, decisions="cosim")
+    xcl.crosscheck(xres)                         # raises on any divergence
+    payload["cosim_crosscheck"] = {
+        "n_jobs": len(xs),
+        "n_resizes_verified": len(xcl.simwl.resize_log),
+    }
+    derived.append(f"crosscheck_ok={len(xcl.simwl.resize_log)}resizes"
+                   f"@{len(xs)}jobs")
+
+    if million_jobs:
+        ms, mn = _replay_specs(million_jobs, seed, trace=trace)
+        _, mres, m_s = _replay_once("event", ms, mn)
+        payload["million_job_replay"] = {
+            "n_jobs": len(ms), "nodes": mn, "event_s": round(m_s, 1),
+            "jobs_per_s": round(len(ms) / m_s, 1),
+            "makespan_ticks": mres.makespan_ticks,
+            "n_resizes": mres.n_resizes,
+        }
+        derived.append(f"{len(ms)}jobs:{round(m_s, 1)}s")
+
+    payload["peak_rss_mb"] = round(_peak_rss_mb(), 1)
+    # merge under "replay" so the JAX grid's results are preserved
+    merged = {}
+    if os.path.exists(BENCH_JSON):
+        with open(BENCH_JSON) as f:
+            merged = json.load(f)
+    merged["replay"] = payload
+    with open(BENCH_JSON, "w") as f:
+        json.dump(merged, f, indent=2)
+    derived.append(f"rss={payload['peak_rss_mb']}mb;json={BENCH_JSON}")
+    report("cluster_replay", time.perf_counter() - t_start,
+           ";".join(derived))
+    return payload
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
@@ -181,11 +306,29 @@ def main():
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--replay", action="store_true",
+                    help="trace-scale sched-only replay: 100k speedup vs "
+                    "reference + cosim crosscheck + 1M event-only")
+    ap.add_argument("--replay-smoke", action="store_true",
+                    help="CI-sized replay: 2k-job speedup + crosscheck")
+    ap.add_argument("--replay-jobs", type=int, default=None,
+                    help="override the replay speedup size")
+    ap.add_argument("--trace", default=None,
+                    help="replay a real SWF file instead of synthetic")
     args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.replay or args.replay_smoke:
+        if args.replay_smoke:
+            run_replay(speedup_jobs=args.replay_jobs or 2_000,
+                       million_jobs=0, crosscheck_jobs=1_000,
+                       seed=args.seed, trace=args.trace)
+        else:
+            run_replay(speedup_jobs=args.replay_jobs or 100_000,
+                       seed=args.seed, trace=args.trace)
+        return
     _ensure_device_farm()
     n_jobs = args.jobs or (6 if args.smoke else 10)
     max_steps = args.steps or (10 if args.smoke else 16)
-    print("name,us_per_call,derived")
     run(n_jobs=n_jobs, max_steps=max_steps, seed=args.seed)
 
 

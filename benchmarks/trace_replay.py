@@ -12,9 +12,13 @@ root so the perf trajectory has a tracked datapoint.
     PYTHONPATH=src python -m benchmarks.trace_replay --smoke   # CI-sized
     PYTHONPATH=src python -m benchmarks.trace_replay --full    # full grid
     PYTHONPATH=src python -m benchmarks.trace_replay --trace path/to.swf
+    PYTHONPATH=src python -m benchmarks.trace_replay --live    # dmr.Cluster
 
 Default: the grid at 10k jobs plus 50k/100k scaling points on the paper
-policy; ``--full`` runs the grid at every size (10k/50k/100k).
+policy; ``--full`` runs the grid at every size (10k/50k/100k); ``--live``
+drives the same traces through the live ``dmr.Cluster`` engines instead
+of the simulator (``benchmarks.live_cluster.run_replay`` — event vs
+reference speedup, cosim crosscheck, 1M-job event-only replay).
 """
 from __future__ import annotations
 
@@ -134,8 +138,18 @@ def main() -> None:
                     help="policy x mode grid at every size (10k/50k/100k)")
     ap.add_argument("--trace", help="replay a real SWF file instead of the "
                     "synthetic trace")
+    ap.add_argument("--live", action="store_true",
+                    help="drive the live dmr.Cluster engines instead of "
+                    "the simulator (sched-only; see benchmarks.live_cluster)")
     args = ap.parse_args()
-    if args.smoke:
+    if args.live:
+        from benchmarks.live_cluster import run_replay
+        if args.smoke:
+            run_replay(speedup_jobs=2_000, million_jobs=0,
+                       crosscheck_jobs=1_000, trace=args.trace)
+        else:
+            run_replay(trace=args.trace)
+    elif args.smoke:
         run(grid_sizes=(2_000,), scale_sizes=(), speedup_jobs=2_000,
             trace=args.trace)
     elif args.full:

@@ -23,7 +23,8 @@ from repro.core.policy import Action, ClusterView, Policy, get_policy
 from repro.core.redistribute import TransferStats
 from repro.dmr.app import App, MalleableApp, ensure_app
 from repro.dmr.cluster import (Cluster, ClusterResult, ClusterRMS, JobRecord,
-                               default_app_factory)
+                               ReferenceCluster, SchedOnlyApp,
+                               default_app_factory, synthetic_pool)
 from repro.dmr.connectors import (FileRMS, PolicyRMS, RMSConnector,
                                   ScriptedRMS, connect)
 from repro.dmr.cosim import SimRMS, SimWorkload
@@ -55,8 +56,8 @@ __all__ = [
     "RMSConnector", "ScriptedRMS", "PolicyRMS", "FileRMS", "SimRMS",
     "connect",
     # multi-tenant live cluster
-    "Cluster", "ClusterRMS", "ClusterResult", "JobRecord", "SimWorkload",
-    "default_app_factory",
+    "Cluster", "ReferenceCluster", "ClusterRMS", "ClusterResult", "JobRecord",
+    "SimWorkload", "default_app_factory", "SchedOnlyApp", "synthetic_pool",
     # shared types
     "MalleableApp", "ensure_app", "MalleabilityParams", "Action",
     "ClusterView", "Policy", "get_policy", "TransferStats", "ResizeEvent",

@@ -17,6 +17,30 @@ of the co-tenants — ``repro.core.policy.live_view``, the same definition
 the simulator engines use), the existing policies (``algorithm2``,
 ``energy``, ``throughput``) drive real multi-job elasticity unmodified.
 
+Two engines share one semantics (``docs/cluster.md``), the same split the
+simulator got in ``repro.rms.scheduler``:
+
+* ``Cluster`` — the production engine.  Event-indexed scheduling on the
+  tick clock: the pending queue is a ``MinRequestIndex`` (lazy-deleted
+  heaps bucketed by minimum request, shared with the simulator), running
+  membership is an insertion-ordered dict, free/allocated/reclaimable
+  counters are maintained incrementally, §3.2 inhibitor windows are
+  tracked in a due-tick heap so quiescent tenants never construct a
+  cluster view, and idle gaps between arrivals are skipped.  Stepping the
+  running tenants stays one-iteration-per-tick (real apps execute); the
+  win is that *scheduling* costs O(events), not O(ticks × queue).
+* ``ReferenceCluster`` — the original tick-polled loop: full pending
+  re-sort per tick, per-query list-built cluster views, ``list.remove``
+  membership.  Obviously correct; kept as the golden model.  The two
+  engines produce bit-identical ``ClusterResult`` summaries, per-job
+  resize trails, and cosim crosscheck records
+  (``tests/test_cluster_equivalence.py``).
+
+Semantics live in ``_ClusterBase`` only — to change scheduling behavior,
+change the base (or a hook's contract) so both engines move together; an
+engine-specific "fix" that the other engine doesn't mirror is a bug by
+definition and the differential harness will flag it.
+
 Time: one tick = one scheduler round = one iteration of every running
 job.  ``tick_s`` (default 1.0) converts ticks to the nominal seconds all
 rate metrics are reported in (``summary()`` mirrors ``SimResult``);
@@ -37,18 +61,26 @@ Decision modes:
     cluster = dmr.Cluster(specs, policy="algorithm2")
     result = cluster.run()
     print(result.summary())
+
+For scheduling-only studies at trace scale (100k–1M SWF jobs) use
+:meth:`Cluster.sched_only`: a synthetic device pool, host-state apps and
+a null redistribute remove every JAX cost from the loop while the
+scheduling path stays byte-for-byte the production one.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.params import MalleabilityParams
-from repro.core.policy import Action, get_policy, live_view
+from repro.core.policy import Action, ClusterView, get_policy, live_view
+from repro.core.redistribute import TransferStats
 from repro.dmr.app import App, MalleableApp, ensure_app
 from repro.dmr.cosim import SimWorkload
 from repro.dmr.runner import MalleableRunner, ResizeEvent
+from repro.rms.eventindex import MinRequestIndex
 from repro.rms.workload import (MOLDABLE, RIGID, AppProfile, Job,
                                 LiveJobSpec)
 
@@ -85,6 +117,56 @@ def default_app_factory(spec: LiveJobSpec) -> App:
                name=f"live-{spec.app.name}")
 
 
+# ----------------------------------------------------------------------
+# scheduling-only mode: trace-scale replays without JAX in the loop
+# ----------------------------------------------------------------------
+
+class SchedOnlyApp:
+    """Host-state stand-in executable for scheduling-only studies: state
+    is one Python int, meshes are synthetic, redistribution moves nothing.
+    Every *scheduling* code path (grants, queries, resizes, release,
+    audit) runs exactly as in production — only the device work is gone,
+    which is what lets a 1M-job SWF replay finish in minutes."""
+
+    def init_state(self, mesh):
+        return {"i": 0}
+
+    def state_shardings(self, mesh):
+        return {"i": None}
+
+    def make_step(self, mesh):
+        def step(state, i, *args):
+            return {"i": state["i"] + 1}, {}
+        return step
+
+
+class _PoolDevice:
+    """A synthetic pool slot (scheduling-only mode): just an ``.id``."""
+    __slots__ = ("id",)
+
+    def __init__(self, i: int):
+        self.id = i
+
+    def __repr__(self) -> str:           # pragma: no cover - debug aid
+        return f"_PoolDevice({self.id})"
+
+
+def synthetic_pool(n: int) -> List[_PoolDevice]:
+    """``n`` synthetic devices for ``Cluster.sched_only`` pools."""
+    return [_PoolDevice(i) for i in range(n)]
+
+
+def _sched_only_mesh(devices, max_model: int = 16):
+    return ("sched-mesh", len(devices))
+
+
+_NULL_STATS = TransferStats(bytes_moved=0, seconds=0.0, n_leaves=0)
+
+
+def _null_redistribute(state, new_shardings):
+    return state, _NULL_STATS
+
+
 class ClusterRMS:
     """The :class:`RMSConnector` a ``dmr.Cluster`` hands each tenant: a
     query evaluates the cluster's shared policy against the *live*
@@ -92,7 +174,7 @@ class ClusterRMS:
     this tenant), and an expand decision carries its device grant — the
     runner's pool is extended before it builds the larger mesh."""
 
-    def __init__(self, cluster: "Cluster", tenant: "_Tenant"):
+    def __init__(self, cluster: "_ClusterBase", tenant: "_Tenant"):
         self.cluster = cluster
         self.tenant = tenant
 
@@ -122,6 +204,7 @@ class _Tenant:
         self.moldable = spec.moldable
         self.malleable = spec.malleable
         self.submit_step = spec.submit_step
+        self.submit_s = getattr(spec, "submit_s", 0.0)
         self.steps = spec.steps
         self.runner: Optional[MalleableRunner] = None
         self.rms: Optional[ClusterRMS] = None
@@ -131,6 +214,8 @@ class _Tenant:
         self.start_tick = -1
         self.end_tick = -1
         self.start_procs = 0
+        self.final_procs = 0
+        self.events: List[ResizeEvent] = []
 
     # -- duck-typed Job surface for the policies ------------------------
     @property
@@ -209,8 +294,18 @@ class ClusterResult:
         }
 
 
-class Cluster:
-    """Co-schedule many live malleable jobs on one shared device pool.
+class _ClusterBase:
+    """Shared semantics of the live cluster's two engines.
+
+    Everything observable — tenant construction, start sizes, the
+    per-query decision path, resize/release/boost mechanics, accounting
+    (integer ``alloc_ticks`` with closed-form energy), tick stepping and
+    completion — lives here.  Engines supply only *mechanism* through the
+    hooks at the bottom: how the pending queue is stored and scanned, how
+    running membership is kept, how the cluster view's aggregates are
+    obtained, whether quiescent inhibitor windows are skipped, and
+    whether dead ticks between arrivals are fast-forwarded.  Both engines
+    must produce bit-identical results; change semantics only here.
 
     ``workload`` is a list of :class:`repro.rms.workload.LiveJobSpec`
     (see ``materialize_live``) and/or explicit ``(app, params,
@@ -224,7 +319,11 @@ class Cluster:
     built from an explicit — possibly non-contiguous — slice of this one
     pool, and devices move between tenants only through the cluster
     (grant on start/expand, reclaim on shrink/completion), audited every
-    tick against double-grants and leaks.
+    tick against double-grants and leaks (``audit=False`` drops the
+    per-tick sweep for trace-scale replays; a final audit always runs).
+    ``record_timeline=False`` skips the per-tick timeline samples (again
+    for scale); ``mesh_factory``/``redistribute`` are forwarded to every
+    tenant's ``MalleableRunner`` (see :meth:`sched_only`).
     """
 
     def __init__(self, workload: Sequence, devices: Optional[List] = None, *,
@@ -233,7 +332,10 @@ class Cluster:
                  engine=None, default_steps: int = 16,
                  tick_s: float = 1.0, idle_w: float = 100.0,
                  loaded_w: float = 340.0, max_model_axis: int = 16,
-                 max_ticks: int = 100_000, prewarm: bool = False):
+                 max_ticks: int = 100_000, prewarm: bool = False,
+                 record_timeline: bool = True, audit: bool = True,
+                 mesh_factory: Optional[Callable] = None,
+                 redistribute: Optional[Callable] = None):
         if decisions not in ("policy", "cosim"):
             raise ValueError(f"decisions={decisions!r}: expected 'policy' "
                              f"or 'cosim'")
@@ -255,6 +357,15 @@ class Cluster:
         self.max_model_axis = max_model_axis
         self.max_ticks = max_ticks
         self.prewarm = prewarm
+        self.record_timeline = record_timeline
+        self.audit = audit
+        self.mesh_factory = mesh_factory
+        self.redistribute = redistribute
+        #: grant/release provenance, recorded while ``audit`` is on:
+        #: ("grant" | "release", jid, (device ids...)) in event order —
+        #: the differential harness asserts both engines move the same
+        #: devices in the same order.
+        self.grant_log: Optional[List[Tuple[str, int, Tuple]]] = None
 
         self.tenants = [self._as_tenant(entry, i)
                         for i, entry in enumerate(workload)]
@@ -277,6 +388,21 @@ class Cluster:
                 self._sim_jobs(),
                 total_steps={t.jid: t.steps for t in self.tenants},
                 config=self._sim_config(), policy=self.policy, engine=engine)
+
+    @classmethod
+    def sched_only(cls, workload: Sequence, n_devices: int = 128, **kw):
+        """A cluster wired for scheduling-only studies at trace scale:
+        synthetic ``n_devices``-slot pool, :class:`SchedOnlyApp`
+        executables, synthetic meshes and a null redistribute — no JAX
+        anywhere in the loop.  All other keywords pass through, so
+        ``Cluster.sched_only(specs, 128, policy="algorithm2",
+        record_timeline=False, audit=False)`` replays million-job SWF
+        materializations; the differential tests use the same wiring at
+        small sizes."""
+        kw.setdefault("app_factory", lambda spec: SchedOnlyApp())
+        kw.setdefault("mesh_factory", _sched_only_mesh)
+        kw.setdefault("redistribute", _null_redistribute)
+        return cls(workload, devices=synthetic_pool(n_devices), **kw)
 
     # -- construction helpers -------------------------------------------
     def _as_tenant(self, entry, i: int) -> _Tenant:
@@ -306,14 +432,22 @@ class Cluster:
             f"(app, MalleabilityParams, submit_step[, mode[, malleable]]) "
             f"tuple")
 
+    def _arrival_order(self) -> List[_Tenant]:
+        """Deterministic arrival order: (tick, original submit, jid) —
+        the tick mapping can collide, so the original submit second
+        breaks ties identically in the live engines *and* in the cosim
+        simulator's stable submit-time sort."""
+        return sorted(self.tenants,
+                      key=lambda t: (t.submit_step, t.submit_s, t.jid))
+
     def _sim_jobs(self) -> List[Job]:
         """The cosim Simulator's input: fresh Jobs over the tenants' live
         profiles (pool-clamped params, scaled step counts), arriving at
         their cluster ticks — the simulated and live clusters see exactly
-        the same workload."""
+        the same workload, in the same deterministic arrival order."""
         return [Job(jid=t.jid, app=t.app, submit_time=float(t.submit_step),
                     moldable=t.moldable, malleable=t.malleable)
-                for t in self.tenants]
+                for t in self._arrival_order()]
 
     def _sim_config(self):
         from repro.rms.scheduler import SimConfig
@@ -325,38 +459,278 @@ class Cluster:
         grant, self._idle = self._idle[:n], self._idle[n:]
         return grant
 
-    def _audit(self, tick: int) -> None:
-        """No device is ever double-granted or leaked: idle pool plus the
-        running tenants' pools is exactly the cluster pool, every tick."""
+    def check_pool_invariants(self, tick: int = 0) -> None:
+        """The pool-accounting invariant both engines must uphold after
+        every event: the idle pool plus the running tenants' pools is
+        exactly the cluster pool — free + granted conserved, no device in
+        two tenants' grants, released slices returned.  Runs every tick
+        while ``audit`` is on (and once at end-of-run regardless);
+        raises ``RuntimeError`` on any violation."""
         held = [d.id for d in self._idle]
-        for t in self._running:
+        running = self._running
+        tenants = running.values() if isinstance(running, dict) else running
+        for t in tenants:
             held.extend(d.id for d in t.runner.devices)
         if sorted(held) != self._pool_ids:
             raise RuntimeError(
                 f"device accounting violated at tick {tick}: pool "
                 f"{self._pool_ids} vs held {sorted(held)}")
 
-    # -- scheduling ------------------------------------------------------
-    def _boost_pending(self) -> None:
-        """Paper: the pending job a shrink enables gets top priority."""
-        free = len(self._idle)
-        fitting = [t for t in self._pending if t.request()[0] <= free]
-        if fitting:
-            min(fitting, key=lambda t: (t.submit_step, t.jid)).boosted = True
+    _audit = check_pool_invariants
 
+    def _grant(self, t: _Tenant, need: int) -> None:
+        grant = self._take(need)
+        t.runner.grant_devices(grant)
+        if self.grant_log is not None:
+            self.grant_log.append(("grant", t.jid,
+                                   tuple(d.id for d in grant)))
+
+    def _reclaim(self, t: _Tenant, released: List) -> None:
+        self._idle.extend(released)
+        if self.grant_log is not None:
+            self.grant_log.append(("release", t.jid,
+                                   tuple(d.id for d in released)))
+
+    # -- scheduling ------------------------------------------------------
     def _start(self, t: _Tenant, p: int, tick: int) -> None:
         t.rms = ClusterRMS(self, t)
+        grant = self._take(p)
         t.runner = MalleableRunner(t.exec_app, t.params, t.rms,
-                                   devices=self._take(p), initial_procs=p,
+                                   devices=grant, initial_procs=p,
                                    max_model_axis=self.max_model_axis,
-                                   allow_partial=True)
+                                   allow_partial=True,
+                                   mesh_factory=self.mesh_factory,
+                                   redistribute=self.redistribute)
         if self.prewarm:
             t.runner.prewarm()
         t.state = t.runner.init()
         t.start_tick = tick
         t.start_procs = p
-        self._pending.remove(t)
+        self._dequeue(t)
+        self._running_add(t)
+        self._note_start(t, tick)
+        if self.grant_log is not None:
+            self.grant_log.append(("grant", t.jid,
+                                   tuple(d.id for d in grant)))
+
+    # -- the per-query decision (ClusterRMS calls back here) ------------
+    def _decide(self, t: _Tenant, step: int, current: int,
+                params: MalleabilityParams) -> Action:
+        if self.simwl is not None:
+            act = self.simwl.pending_action(t.jid, step)
+            if act is None:
+                return Action.none(current)
+            if act.target > current:
+                need = act.target - current
+                if need > len(self._idle):
+                    return Action.none(current)     # defer until devices free
+                self._grant(t, need)
+            self.simwl.consume(t.jid)
+            self._note_resize(t, current, act.target)
+            return act
+        act = self.policy.decide(current, params, self._live_view(t), job=t)
+        if act.kind == "none":
+            return Action.none(current)
+        target = params.clamp(act.target)
+        if target == current:
+            return Action.none(current)
+        if target > current:
+            need = target - current
+            if need > len(self._idle):
+                return Action.none(current)         # view raced; be safe
+            self._grant(t, need)
+            self._note_resize(t, current, target)
+            return Action("expand", target)
+        self._note_resize(t, current, target)
+        return Action("shrink", target)
+
+    # -- main loop -------------------------------------------------------
+    def _tick_tenant(self, t: _Tenant, tick: int) -> bool:
+        """Advance one tenant by one tick; True iff it completed."""
+        r = t.runner
+        simwl = self.simwl
+        if t.malleable:
+            if t.step < t.steps:
+                if self._query_gate(t, tick):
+                    t.state = r.maybe_reconfig(t.state, t.step)
+            elif simwl is not None and simwl.unconsumed(t.jid):
+                # completion boundary with an unreplayed trail: drive the
+                # connector directly (the runner's per-step query guard
+                # would suppress a repeat query at the same iteration)
+                act = t.rms.query(step=t.step, current=r.current,
+                                  params=t.params)
+                if act.kind != "none":
+                    t.state = r.apply_resize(t.state, t.steps - 1, act)
+            if r.current < len(r.devices):          # shrink: reclaim the tail
+                self._reclaim(t, r.release_devices())
+                self._boost_pending()
+        if t.step < t.steps:
+            t.state, _ = r.step(t.state, t.step)
+            t.step += 1
+        if t.step >= t.steps and not (simwl is not None
+                                      and simwl.unconsumed(t.jid)):
+            t.end_tick = tick + 1
+            t.final_procs = r.current
+            t.events = r.events
+            self._reclaim(t, r.shutdown())
+            self._note_finish(t)
+            # drop the runner/state so a million completed tenants don't
+            # pin device lists and app state; records read the captured
+            # final_procs/events
+            t.runner = None
+            t.rms = None
+            t.state = None
+            return True
+        return False
+
+    def run(self) -> ClusterResult:
+        t0 = time.perf_counter()
+        for t in self.tenants:                   # re-runnable: fresh state
+            t.runner = None
+            t.rms = None
+            t.state = None
+            t.step = 0
+            t.boosted = False
+            t.start_tick = -1
+            t.end_tick = -1
+            t.start_procs = 0
+            t.final_procs = 0
+            t.events = []
+        if self.simwl is not None:
+            self.simwl.reset()
+        self._idle: List = list(self.devices)
+        self.grant_log = [] if self.audit else None
+        self._setup_queues()
+        done: List[_Tenant] = []
+        arrivals = self._arrival_order()
+        ai = 0
+        # the clock starts at the first arrival (makespan is "first
+        # arrival -> last completion", matching SimResult — ticks before
+        # any job exists are dead time, not schedule quality)
+        start = arrivals[0].submit_step if arrivals else 0
+        self._t0_tick = start
+        tick = start
+        pool = len(self.devices)
+        alloc_ticks = 0                          # integer device-ticks
+        timeline: Dict[str, List] = {"tick": [], "allocated": [],
+                                     "running": [], "completed": []}
+        n_total = len(self.tenants)
+        while len(done) < n_total:
+            if tick - start >= self.max_ticks:
+                raise RuntimeError(
+                    f"cluster stalled: {len(done)}/{n_total} jobs "
+                    f"after {tick - start} ticks (deferred cosim expands, "
+                    f"or a pending job that never fits?)")
+            self._tick = tick
+            while ai < len(arrivals) and arrivals[ai].submit_step <= tick:
+                self._enqueue(arrivals[ai], tick)
+                ai += 1
+            self._try_schedule(tick)
+            for t in self._running_order():
+                if self._tick_tenant(t, tick):
+                    self._running_remove(t)
+                    done.append(t)
+            allocated = pool - len(self._idle)
+            alloc_ticks += allocated
+            if self.record_timeline:
+                timeline["tick"].append(tick)
+                timeline["allocated"].append(allocated)
+                timeline["running"].append(self._n_running())
+                timeline["completed"].append(len(done))
+            if self.audit:
+                self.check_pool_invariants(tick)
+            tick = self._next_tick(tick, ai, arrivals, timeline, len(done))
+        self.check_pool_invariants(tick)         # end-of-run: always
+
+        events_by_jid = {t.jid: t.events for t in done}
+        n_resizes = sum(len(ev) for ev in events_by_jid.values())
+        records = [JobRecord(
+            jid=t.jid, name=t.app.name, submit_step=t.submit_step,
+            start_tick=t.start_tick, end_tick=t.end_tick,
+            start_procs=t.start_procs, final_procs=t.final_procs,
+            resizes=[(e.action, e.from_procs, e.to_procs)
+                     for e in t.events])
+            for t in sorted(done, key=lambda x: x.jid)]
+        makespan = tick - start
+        # closed-form energy from the integer device-tick total: both
+        # engines compute the identical float expression, independent of
+        # how many ticks each engine actually iterated (gap skipping)
+        idle_ticks = pool * makespan - alloc_ticks
+        energy_kwh = ((alloc_ticks * self.loaded_w +
+                       idle_ticks * self.idle_w) * self.tick_s) / 3.6e6
+        return ClusterResult(
+            records=records, makespan_ticks=makespan,
+            alloc_rate=alloc_ticks / (pool * makespan) if makespan else 0.0,
+            energy_kwh=energy_kwh,
+            n_resizes=n_resizes, tick_s=self.tick_s,
+            wall_s=time.perf_counter() - t0,
+            events_by_jid=events_by_jid, timeline=timeline)
+
+    def crosscheck(self, result: ClusterResult) -> Dict[int, List]:
+        """cosim mode: verify every runner's resize trail against the
+        simulator's ``resize_log`` (raises ``ValueError`` on divergence)."""
+        if self.simwl is None:
+            raise ValueError("crosscheck needs decisions='cosim'")
+        return self.simwl.crosscheck(result.events_by_jid)
+
+    # -- engine hooks ---------------------------------------------------
+    def _setup_queues(self) -> None: ...
+    def _n_running(self) -> int: ...
+    def _running_order(self) -> List[_Tenant]: ...
+    def _running_add(self, t: _Tenant) -> None: ...
+    def _running_remove(self, t: _Tenant) -> None: ...
+    def _has_pending(self) -> bool: ...
+    def _enqueue(self, t: _Tenant, tick: int) -> None: ...
+    def _dequeue(self, t: _Tenant) -> None: ...
+    def _boost_pending(self) -> None: ...
+    def _try_schedule(self, tick: int) -> None: ...
+    def _live_view(self, t: _Tenant) -> ClusterView: ...
+    def _query_gate(self, t: _Tenant, tick: int) -> bool: ...
+    def _note_start(self, t: _Tenant, tick: int) -> None: ...
+    def _note_finish(self, t: _Tenant) -> None: ...
+    def _note_resize(self, t: _Tenant, old: int, new: int) -> None: ...
+    def _next_tick(self, tick: int, ai: int, arrivals, timeline,
+                   n_done: int) -> int: ...
+
+
+class ReferenceCluster(_ClusterBase):
+    """The original tick-polled engine — full pending re-sort per tick,
+    per-query list-built cluster views, ``list.remove`` membership.  Slow
+    at trace scale but obviously correct; the event engine is validated
+    against it bit-for-bit (``tests/test_cluster_equivalence.py``)."""
+
+    def _setup_queues(self) -> None:
+        self._pending: List[_Tenant] = []
+        self._running: List[_Tenant] = []
+
+    def _n_running(self) -> int:
+        return len(self._running)
+
+    def _running_order(self) -> List[_Tenant]:
+        return list(self._running)
+
+    def _running_add(self, t: _Tenant) -> None:
         self._running.append(t)
+
+    def _running_remove(self, t: _Tenant) -> None:
+        self._running.remove(t)
+
+    def _has_pending(self) -> bool:
+        return bool(self._pending)
+
+    def _enqueue(self, t: _Tenant, tick: int) -> None:
+        self._pending.append(t)
+
+    def _dequeue(self, t: _Tenant) -> None:
+        self._pending.remove(t)
+
+    def _boost_pending(self) -> None:
+        """Paper: the pending job a shrink enables gets top priority."""
+        free = len(self._idle)
+        fitting = [t for t in self._pending if t.request()[0] <= free]
+        if fitting:
+            min(fitting, key=lambda t: (t.submit_step, t.submit_s,
+                                        t.jid)).boosted = True
 
     def _try_schedule(self, tick: int) -> None:
         if not self._pending:
@@ -385,141 +759,197 @@ class Cluster:
             elif not self.policy.backfill:
                 break
 
-    # -- the per-query decision (ClusterRMS calls back here) ------------
-    def _decide(self, t: _Tenant, step: int, current: int,
-                params: MalleabilityParams) -> Action:
-        if self.simwl is not None:
-            act = self.simwl.pending_action(t.jid, step)
-            if act is None:
-                return Action.none(current)
-            if act.target > current:
-                need = act.target - current
-                if need > len(self._idle):
-                    return Action.none(current)     # defer until devices free
-                t.runner.grant_devices(self._take(need))
-            self.simwl.consume(t.jid)
-            return act
-        view = live_view(
+    def _live_view(self, t: _Tenant) -> ClusterView:
+        return live_view(
             available=len(self._idle),
             pending_min_sizes=[p.request()[0] for p in self._pending],
             tenants=self._running, exclude=t)
-        act = self.policy.decide(current, params, view, job=t)
-        if act.kind == "none":
-            return Action.none(current)
-        target = params.clamp(act.target)
-        if target == current:
-            return Action.none(current)
-        if target > current:
-            need = target - current
-            if need > len(self._idle):
-                return Action.none(current)         # view raced; be safe
-            t.runner.grant_devices(self._take(need))
-            return Action("expand", target)
-        return Action("shrink", target)
 
-    # -- main loop -------------------------------------------------------
-    def _tick_tenant(self, t: _Tenant, tick: int) -> bool:
-        """Advance one tenant by one tick; True iff it completed."""
-        r = t.runner
-        if t.malleable:
-            if t.step < t.steps:
-                t.state = r.maybe_reconfig(t.state, t.step)
-            elif self.simwl is not None and self.simwl.unconsumed(t.jid):
-                # completion boundary with an unreplayed trail: drive the
-                # connector directly (the runner's per-step query guard
-                # would suppress a repeat query at the same iteration)
-                act = t.rms.query(step=t.step, current=r.current,
-                                  params=t.params)
-                if act.kind != "none":
-                    t.state = r.apply_resize(t.state, t.steps - 1, act)
-            if r.current < len(r.devices):          # shrink: reclaim the tail
-                self._idle.extend(r.release_devices())
-                self._boost_pending()
-        if t.step < t.steps:
-            t.state, _ = r.step(t.state, t.step)
-            t.step += 1
-        if t.step >= t.steps and not (self.simwl is not None
-                                      and self.simwl.unconsumed(t.jid)):
-            t.end_tick = tick + 1
-            self._idle.extend(r.shutdown())
+    def _query_gate(self, t: _Tenant, tick: int) -> bool:
+        return True                     # the runner's own guards decide
+
+    def _note_start(self, t: _Tenant, tick: int) -> None:
+        pass
+
+    def _note_finish(self, t: _Tenant) -> None:
+        pass
+
+    def _note_resize(self, t: _Tenant, old: int, new: int) -> None:
+        pass
+
+    def _next_tick(self, tick: int, ai: int, arrivals, timeline,
+                   n_done: int) -> int:
+        return tick + 1
+
+
+class Cluster(_ClusterBase):
+    """High-throughput event-indexed engine (the default).
+
+    Index structures, mirroring the simulator's fast engine:
+
+    * ``_pq``: a ``repro.rms.eventindex.MinRequestIndex`` over the
+      pending tenants — the scheduling scan touches bucket heads that
+      fit, not the whole queue, and the post-shrink boost reads the
+      arrival heads.  (Cosim replay keeps a start-order heap instead:
+      the simulated scheduler already fixed the order.)
+    * ``_running``: insertion-ordered dict — start order, O(1) removal.
+    * ``_reclaim_total``: the running malleable tenants' pooled
+      reclaimable workers, maintained at start/resize/finish, so a
+      cluster view is O(1) aggregates instead of an O(running) sweep.
+    * ``_due_heap``: §3.2 inhibitor windows as due ticks — a tenant
+      whose window is closed is skipped without even calling into its
+      runner.  Tenants with *wall-clock* inhibitors (``sched_period_s``)
+      fall back to per-tick runner checks, exactly like the reference.
+    * dead ticks (nothing running or pending, next arrival in the
+      future) are fast-forwarded; the timeline records the skipped
+      samples when enabled, and the integer tick arithmetic keeps every
+      reported metric bit-identical to the reference engine's.
+    """
+
+    def _setup_queues(self) -> None:
+        self._dynamic = getattr(self.policy, "dynamic_priority", True)
+        self._stateless = getattr(self.policy, "decide_stateless", False)
+        self._pending_map: Dict[int, _Tenant] = {}
+        self._cosim_heap: List[Tuple[int, int, int]] = []
+        self._arr_seq = 0
+        self._pq = MinRequestIndex()
+        self._running: Dict[int, _Tenant] = {}
+        self._reclaim_total = 0
+        self._due_heap: List[Tuple[int, int]] = []
+        self._due_now: set = set()
+
+    def _n_running(self) -> int:
+        return len(self._running)
+
+    def _running_order(self) -> List[_Tenant]:
+        return list(self._running.values())
+
+    def _running_add(self, t: _Tenant) -> None:
+        self._running[t.jid] = t
+
+    def _running_remove(self, t: _Tenant) -> None:
+        del self._running[t.jid]
+
+    def _has_pending(self) -> bool:
+        if self.simwl is not None:
+            return bool(self._pending_map)
+        return bool(self._pq)
+
+    # -- pending queue --------------------------------------------------
+    def _enqueue(self, t: _Tenant, tick: int) -> None:
+        if self.simwl is not None:
+            self._pending_map[t.jid] = t
+            heapq.heappush(self._cosim_heap,
+                           (self.simwl.start_order.get(t.jid, 1 << 30),
+                            self._arr_seq, t.jid))
+            self._arr_seq += 1
+            return
+        key = None if self._dynamic \
+            else self.policy.priority_key(t, float(tick))
+        self._pq.push(t.jid, t, t.request()[0], key)
+
+    def _dequeue(self, t: _Tenant) -> None:
+        if self.simwl is not None:
+            del self._pending_map[t.jid]
+            return
+        self._pq.discard(t.jid)
+
+    def _boost_pending(self) -> None:
+        if self.simwl is not None:
+            return           # replay order is fixed; the flag is unread
+        p = self._pq.earliest_fitting(len(self._idle))
+        if p is not None and not p.boosted:
+            p.boosted = True
+            self._pq.rekey(p.jid, None if self._dynamic
+                           else self.policy.priority_key(
+                               p, float(self._tick)))
+
+    def _try_schedule(self, tick: int) -> None:
+        if self.simwl is not None:
+            idx = self._cosim_heap
+            pend = self._pending_map
+            while idx:
+                _so, _seq, jid = idx[0]
+                t = pend.get(jid)
+                if t is None:
+                    heapq.heappop(idx)         # started earlier: stale
+                    continue
+                p = self.simwl.start_procs.get(jid, t.params.preferred)
+                if p > len(self._idle):
+                    break                      # strict replay order
+                self._start(t, p, tick)
+            return
+        pq = self._pq
+        if not pq or len(self._idle) < pq.min_lo:
+            return
+        if self._dynamic:
+            pq.rebuild(lambda t: self.policy.priority_key(t, float(tick)))
+        backfill = self.policy.backfill
+        while pq:
+            free = len(self._idle)
+            t = pq.best(free, backfill)
+            if t is None:
+                break
+            lo, hi = t.request()
+            if lo > free:
+                break                          # strict FCFS: blocked head
+            self._start(t, min(free, hi) if t.moldable else hi, tick)
+
+    # -- cluster view (O(1) aggregates) ---------------------------------
+    def _live_view(self, t: _Tenant) -> ClusterView:
+        own = max(0, t.nprocs - t.params.preferred) if t.malleable else 0
+        return ClusterView(
+            available=len(self._idle),
+            pending_min_sizes=self._pq.min_sizes(self._stateless),
+            reclaimable_others=self._reclaim_total - own)
+
+    # -- inhibitor windows ----------------------------------------------
+    def _query_gate(self, t: _Tenant, tick: int) -> bool:
+        if t.params.sched_period_s:
+            return True                 # wall-clock window: runner decides
+        dh = self._due_heap
+        dn = self._due_now
+        while dh and dh[0][0] <= tick:
+            jid = heapq.heappop(dh)[1]
+            if jid in self._running:
+                dn.add(jid)
+        if t.jid in dn:
+            dn.discard(t.jid)
+            heapq.heappush(dh, (tick + max(t.params.sched_iterations, 1),
+                                t.jid))
             return True
         return False
 
-    def run(self) -> ClusterResult:
-        t0 = time.perf_counter()
-        for t in self.tenants:                   # re-runnable: fresh state
-            t.runner = None
-            t.rms = None
-            t.state = None
-            t.step = 0
-            t.boosted = False
-            t.start_tick = -1
-            t.end_tick = -1
-            t.start_procs = 0
-        if self.simwl is not None:
-            self.simwl.reset()
-        self._idle: List = list(self.devices)
-        self._pending: List[_Tenant] = []
-        self._running: List[_Tenant] = []
-        done: List[_Tenant] = []
-        arrivals = sorted(self.tenants, key=lambda t: (t.submit_step, t.jid))
-        ai = 0
-        # the clock starts at the first arrival (makespan is "first
-        # arrival -> last completion", matching SimResult — ticks before
-        # any job exists are dead time, not schedule quality)
-        start = arrivals[0].submit_step if arrivals else 0
-        tick = start
-        pool = len(self.devices)
-        alloc_ticks = 0.0
-        energy_ws = 0.0
-        timeline: Dict[str, List] = {"tick": [], "allocated": [],
-                                     "running": [], "completed": []}
-        while len(done) < len(self.tenants):
-            if tick - start >= self.max_ticks:
-                raise RuntimeError(
-                    f"cluster stalled: {len(done)}/{len(self.tenants)} jobs "
-                    f"after {tick - start} ticks (deferred cosim expands, "
-                    f"or a pending job that never fits?)")
-            while ai < len(arrivals) and arrivals[ai].submit_step <= tick:
-                self._pending.append(arrivals[ai])
-                ai += 1
-            self._try_schedule(tick)
-            for t in list(self._running):
-                if self._tick_tenant(t, tick):
-                    self._running.remove(t)
-                    done.append(t)
-            allocated = pool - len(self._idle)
-            alloc_ticks += allocated
-            energy_ws += (allocated * self.loaded_w +
-                          len(self._idle) * self.idle_w) * self.tick_s
-            timeline["tick"].append(tick)
-            timeline["allocated"].append(allocated)
-            timeline["running"].append(len(self._running))
-            timeline["completed"].append(len(done))
-            self._audit(tick)
-            tick += 1
+    # -- incremental counters -------------------------------------------
+    def _note_start(self, t: _Tenant, tick: int) -> None:
+        if t.malleable:
+            self._reclaim_total += max(
+                0, t.runner.current - t.params.preferred)
+            if not t.params.sched_period_s:
+                heapq.heappush(self._due_heap, (tick, t.jid))
 
-        events_by_jid = {t.jid: t.runner.events for t in done}
-        n_resizes = sum(len(ev) for ev in events_by_jid.values())
-        records = [JobRecord(
-            jid=t.jid, name=t.app.name, submit_step=t.submit_step,
-            start_tick=t.start_tick, end_tick=t.end_tick,
-            start_procs=t.start_procs, final_procs=t.runner.current,
-            resizes=[(e.action, e.from_procs, e.to_procs)
-                     for e in t.runner.events])
-            for t in sorted(done, key=lambda x: x.jid)]
-        makespan = tick - start
-        return ClusterResult(
-            records=records, makespan_ticks=makespan,
-            alloc_rate=alloc_ticks / (pool * makespan) if makespan else 0.0,
-            energy_kwh=energy_ws / 3.6e6,
-            n_resizes=n_resizes, tick_s=self.tick_s,
-            wall_s=time.perf_counter() - t0,
-            events_by_jid=events_by_jid, timeline=timeline)
+    def _note_finish(self, t: _Tenant) -> None:
+        if t.malleable:
+            self._reclaim_total -= max(
+                0, t.final_procs - t.params.preferred)
 
-    def crosscheck(self, result: ClusterResult) -> Dict[int, List]:
-        """cosim mode: verify every runner's resize trail against the
-        simulator's ``resize_log`` (raises ``ValueError`` on divergence)."""
-        if self.simwl is None:
-            raise ValueError("crosscheck needs decisions='cosim'")
-        return self.simwl.crosscheck(result.events_by_jid)
+    def _note_resize(self, t: _Tenant, old: int, new: int) -> None:
+        if t.malleable:
+            pref = t.params.preferred
+            self._reclaim_total += max(0, new - pref) - max(0, old - pref)
+
+    # -- dead-tick fast-forward -----------------------------------------
+    def _next_tick(self, tick: int, ai: int, arrivals, timeline,
+                   n_done: int) -> int:
+        if self._running or ai >= len(arrivals) or self._has_pending():
+            return tick + 1
+        nxt = min(arrivals[ai].submit_step, self._t0_tick + self.max_ticks)
+        if nxt <= tick + 1:
+            return tick + 1
+        if self.record_timeline:       # the reference samples every tick
+            for g in range(tick + 1, nxt):
+                timeline["tick"].append(g)
+                timeline["allocated"].append(0)
+                timeline["running"].append(0)
+                timeline["completed"].append(n_done)
+        return nxt

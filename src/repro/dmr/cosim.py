@@ -203,6 +203,12 @@ class SimWorkload:
                                     resize_listener=_listener)
         self.result = sim.run()
         self.resize_log = self.result.resize_log
+        # jid-indexed view of the resize log: ``crosscheck`` at trace
+        # scale (100k+ jobs) would otherwise rescan the whole log per jid
+        self._resizes_by_jid: Dict[int, List[Tuple[str, int, int]]] = {}
+        for r in self.resize_log:
+            self._resizes_by_jid.setdefault(r.jid, []).append(
+                (r.kind, r.from_procs, r.to_procs))
         self.schedules = {jid: _normalize_schedule(s, total_steps[jid], jid)
                           for jid, s in raw.items()}
         self.start_procs: Dict[int, int] = {}
@@ -241,8 +247,7 @@ class SimWorkload:
 
     # -- verification ----------------------------------------------------
     def expected_resizes(self, jid: int) -> List[Tuple[str, int, int]]:
-        return [(r.kind, r.from_procs, r.to_procs)
-                for r in self.resize_log if r.jid == jid]
+        return list(self._resizes_by_jid.get(jid, ()))
 
     def crosscheck(self, events_by_jid: Dict[int, List]) -> Dict[int, List]:
         """Verify per-job runner events against the simulator's resize_log.
@@ -251,7 +256,7 @@ class SimWorkload:
         ``ClusterResult.events_by_jid`` holds).  Raises ``ValueError``
         naming every diverging jid; returns the matched per-jid
         ``(kind, from, to)`` lists."""
-        jids = sorted(set(events_by_jid) | {r.jid for r in self.resize_log})
+        jids = sorted(set(events_by_jid) | set(self._resizes_by_jid))
         matched, diverged = {}, []
         for jid in jids:
             got = [(e.action, e.from_procs, e.to_procs)

@@ -74,13 +74,18 @@ class MalleableRunner:
                  policy=None,
                  cluster_view: Optional[Callable[[], ClusterView]] = None,
                  initial_procs: Optional[int] = None,
-                 allow_partial: bool = False):
+                 allow_partial: bool = False,
+                 mesh_factory: Optional[Callable] = None):
         self.app = ensure_app(app)
         self.params = params
         self.devices = list(devices) if devices is not None else jax.devices()
         self.patterns = patterns if patterns is not None \
             else getattr(self.app, "patterns", None)
         self._custom_redistribute = redistribute
+        # ``mesh_factory(devices, max_model=)`` replaces ``make_job_mesh``:
+        # trace-scale scheduling studies (dmr.Cluster.sched_only) run a
+        # million runners with synthetic device pools and no JAX meshes
+        self._mesh_factory = mesh_factory
         self.max_model_axis = max_model_axis
         self.current = params.clamp(initial_procs) \
             if initial_procs is not None else params.preferred
@@ -125,7 +130,8 @@ class MalleableRunner:
                 f"devices in the live pool (shrunk by handle_failure, or a "
                 f"partial dmr.Cluster grant?) — a still-legal size must be "
                 f"clamped to the pool before building its mesh")
-        return make_job_mesh(self.devices[:n], max_model=self.max_model_axis)
+        factory = self._mesh_factory or make_job_mesh
+        return factory(self.devices[:n], max_model=self.max_model_axis)
 
     def _pool_clamp(self, target: int) -> int:
         """Largest legal size that both satisfies ``params`` and fits the
@@ -203,18 +209,28 @@ class MalleableRunner:
         return released
 
     # ------------------------------------------------------------------
-    def maybe_reconfig(self, state, step: int):
-        """Algorithm 1: check role/inhibitors, query RMS, resize if told to."""
+    def query_due(self, step: int) -> bool:
+        """True iff ``maybe_reconfig`` at this step would actually query
+        the RMS — both §3.2 inhibitor guards pass.  Schedulers that track
+        inhibitor windows externally (the event-driven ``dmr.Cluster``)
+        use this to skip the call entirely for quiescent tenants."""
         p = self.params
         if step - self._last_query_step < max(p.sched_iterations, 1):
-            return state
+            return False
         if p.sched_period_s and \
                 time.monotonic() - self._last_query_time < p.sched_period_s:
+            return False
+        return True
+
+    def maybe_reconfig(self, state, step: int):
+        """Algorithm 1: check role/inhibitors, query RMS, resize if told to."""
+        if not self.query_due(step):
             return state
         self._last_query_step = step
         self._last_query_time = time.monotonic()
 
-        action = self.rms.query(step=step, current=self.current, params=p)
+        action = self.rms.query(step=step, current=self.current,
+                                params=self.params)
         if action.kind == "none" or action.target == self.current:
             return state
         return self.apply_resize(state, step, action)

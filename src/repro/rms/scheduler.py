@@ -47,7 +47,10 @@ from typing import Dict, List, Optional, Tuple, Union
 import numpy as np
 
 from repro.core.policy import ClusterView, Policy, get_policy, live_view
+from repro.rms.eventindex import MinRequestIndex, PendingMins
 from repro.rms.workload import Job
+
+_PendingMins = PendingMins                 # moved to repro.rms.eventindex
 
 
 @dataclasses.dataclass
@@ -125,35 +128,6 @@ class SimResult:
             "throughput_jps": throughput,
             "n_resizes": self.n_resizes,
         }
-
-
-class _PendingMins:
-    """Multiset summary of the pending jobs' minimum requests.
-
-    Duck-types the ``ClusterView.pending_min_sizes`` sequence without
-    materializing one int per queued job: ``len``/``bool`` reflect the true
-    queue size, iteration yields the *distinct* minimum sizes in ascending
-    order.  Every aggregate the built-in policies compute (`truthiness,
-    ``min(...)``, ``any(x >= m for m in ...)``) is unchanged by collapsing
-    duplicates.  Only ``decide_stateless`` policies see this view — for
-    anything else the fast engine materializes the reference engine's
-    literal per-job list.
-    """
-
-    __slots__ = ("_counts", "_n")
-
-    def __init__(self, counts: Dict[int, int], n: int):
-        self._counts = counts
-        self._n = n
-
-    def __bool__(self) -> bool:
-        return self._n > 0
-
-    def __len__(self) -> int:
-        return self._n
-
-    def __iter__(self):
-        return iter(sorted(self._counts))
 
 
 class _SimulatorBase:
@@ -497,12 +471,13 @@ class Simulator(_SimulatorBase):
     Index structures (all lazily deleted — stale entries are discarded on
     pop against per-job version counters):
 
-    * ``_prio_heaps``: pending jobs bucketed by minimum request size, each
-      bucket a heap on ``(priority_key, arrival_seq)``.  A backfill scan
-      peeks only bucket heads that fit in ``free``, so its cost is
-      proportional to the number of jobs *started*, not the queue length.
-    * ``_arrival_heaps``: the same buckets keyed by arrival order, for the
-      post-shrink boost ("earliest pending job that now fits").
+    * ``_pq``: a ``repro.rms.eventindex.MinRequestIndex`` — pending jobs
+      bucketed by minimum request size, each bucket a lazy-deleted heap on
+      ``(priority_key, arrival_seq)`` plus an arrival heap for the
+      post-shrink boost.  A backfill scan peeks only bucket heads that fit
+      in ``free``, so its cost is proportional to the number of jobs
+      *started*, not the queue length.  (Shared with the event-driven
+      ``dmr.Cluster`` engine.)
     * ``_reconfig_heap``: running malleable jobs keyed by the end of their
       inhibitor window; the malleability pass touches only jobs whose
       window has expired.
@@ -518,21 +493,16 @@ class Simulator(_SimulatorBase):
     """
 
     def _setup(self) -> None:
-        self._pending: Dict[int, Job] = {}         # jid -> Job, arrival order
+        self._pq = MinRequestIndex()               # pending, arrival order
         self._running: Dict[int, Job] = {}         # jid -> Job, start order
         self._n_done = 0
         self._alloc = 0
-        self._pending_lo: Dict[int, int] = {}      # min request -> count
-        self._min_lo = np.inf                      # min over _pending_lo keys
-        self._prio_heaps: Dict[int, list] = {}     # lo -> [(key, seq, ver, jid)]
-        self._arrival_heaps: Dict[int, list] = {}  # lo -> [(seq, jid)]
         self._reconfig_heap: List[Tuple[float, int, int]] = []
         self._eligible: List[Tuple[float, int, int]] = []
         self._reclaim_total = 0
         self._epoch = 0
         self._pass_epoch = -1
         self._decide_memo: Dict[int, Tuple[int, int]] = {}
-        self._arr_seq = 0
         self._start_seq = 0
         self._dynamic = getattr(self.policy, "dynamic_priority", True)
         self._stateless = getattr(self.policy, "decide_stateless", False)
@@ -555,106 +525,38 @@ class Simulator(_SimulatorBase):
 
     # -- pending queue --------------------------------------------------
     def _enqueue(self, j: Job) -> None:
-        lo = j.request()[0]
-        seq = self._arr_seq
-        self._arr_seq += 1
-        j._arr_seq = seq
-        j._pq_ver = 0
-        j._lo = lo
-        self._pending[j.jid] = j
-        self._pending_lo[lo] = self._pending_lo.get(lo, 0) + 1
-        if lo < self._min_lo:
-            self._min_lo = lo
-        if not self._dynamic:
-            key = self.policy.priority_key(j, self.now)
-            heapq.heappush(self._prio_heaps.setdefault(lo, []),
-                           (key, seq, 0, j.jid))
-        heapq.heappush(self._arrival_heaps.setdefault(lo, []), (seq, j.jid))
+        key = None if self._dynamic else self.policy.priority_key(j, self.now)
+        self._pq.push(j.jid, j, j.request()[0], key)
         self._epoch += 1
 
     def _unqueue(self, j: Job) -> None:
-        del self._pending[j.jid]
-        lo = j._lo
-        n = self._pending_lo[lo] - 1
-        if n:
-            self._pending_lo[lo] = n
-        else:
-            del self._pending_lo[lo]
-            self._min_lo = min(self._pending_lo) if self._pending_lo \
-                else np.inf
+        self._pq.discard(j.jid)
         self._epoch += 1
 
-    def _rebuild_prio_heaps(self) -> None:
-        """dynamic_priority fallback: keys age with time, so re-key the
-        whole queue at each scheduling pass (reference-engine cost)."""
-        self._prio_heaps = heaps = {}
-        now = self.now
-        for j in self._pending.values():
-            j._pq_ver += 1
-            key = self.policy.priority_key(j, now)
-            heapq.heappush(heaps.setdefault(j._lo, []),
-                           (key, j._arr_seq, j._pq_ver, j.jid))
-
     def _try_schedule(self) -> None:
-        if not self._pending or self.free < self._min_lo:
+        pq = self._pq
+        if not pq or self.free < pq.min_lo:
             return
         if self._dynamic:
-            self._rebuild_prio_heaps()
+            now = self.now
+            pq.rebuild(lambda j: self.policy.priority_key(j, now))
         backfill = self.policy.backfill
-        pending = self._pending
-        heaps = self._prio_heaps
-        while pending:
-            best = best_heap = None
-            for lo in list(heaps):
-                h = heaps[lo]
-                while h:
-                    head = h[0]
-                    job = pending.get(head[3])
-                    if job is not None and job._pq_ver == head[2]:
-                        break
-                    heapq.heappop(h)       # lazy-deleted (started / re-keyed)
-                if not h:
-                    del heaps[lo]
-                    continue
-                if backfill and lo > self.free:
-                    continue               # backfill scans past, for free
-                if best is None or h[0][:2] < best[:2]:
-                    best, best_heap = h[0], h
-            if best is None:
+        while pq:
+            j = pq.best(self.free, backfill)
+            if j is None:
                 break
-            j = pending[best[3]]
             lo, hi = j.request()
             if lo > self.free:             # strict FCFS: blocked queue head
                 break
-            heapq.heappop(best_heap)
             self._unqueue(j)
             self._start(j, min(self.free, hi) if j.moldable else hi)
 
     def _boost_pending(self) -> None:
-        free = self.free
-        pending = self._pending
-        best = None
-        for lo in list(self._arrival_heaps):
-            if lo > free:
-                continue
-            h = self._arrival_heaps[lo]
-            while h and h[0][1] not in pending:
-                heapq.heappop(h)
-            if not h:
-                del self._arrival_heaps[lo]
-                continue
-            if best is None or h[0] < best:
-                best = h[0]
-        if best is None:
-            return
-        p = pending[best[1]]
-        if not p.boosted:
+        p = self._pq.earliest_fitting(self.free)
+        if p is not None and not p.boosted:
             p.boosted = True
-            p._pq_ver += 1
-            if not self._dynamic:
-                key = self.policy.priority_key(p, self.now)
-                heapq.heappush(self._prio_heaps.setdefault(p._lo, []),
-                               (key, p._arr_seq, p._pq_ver, p.jid))
+            self._pq.rekey(p.jid, None if self._dynamic
+                           else self.policy.priority_key(p, self.now))
 
     # -- running set ----------------------------------------------------
     def _on_start(self, j: Job) -> None:
@@ -717,8 +619,7 @@ class Simulator(_SimulatorBase):
         stateless = self._stateless
         # stateless policies get the compact multiset summary; anything else
         # gets the reference engine's literal per-job list (arrival order)
-        pend_view = _PendingMins(self._pending_lo, len(self._pending)) \
-            if stateless else [p.request()[0] for p in self._pending.values()]
+        pend_view = self._pq.min_sizes(stateless)
         for entry in self._eligible:
             t_ok, _, jid = entry
             j = self._running.get(jid)

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -260,12 +261,17 @@ def parse_swf(source, *, max_jobs: Optional[int] = None,
 
     ``source`` is a filesystem path, a string containing the trace text, or
     an iterable of lines.  Cancelled/failed records (non-positive runtime or
-    processor count) and malformed lines are skipped, submit times are
-    re-based to t=0, and the cluster size is taken from ``nodes=``, the
-    trace's ``MaxNodes:``/``MaxProcs:`` header, or the widest job seen —
-    in that order.  Returns ``(jobs, simconfig_overrides)`` matching the
-    scenario-library contract, so ``make_scenario("trace:path.swf")`` can
-    hand the result straight to ``Simulator``.
+    processor count) and malformed/partial lines are skipped — never a
+    crash — and one aggregated ``UserWarning`` reports how many records
+    were dropped and why (real archive traces carry thousands of such
+    records; a per-line warning would drown a 1M-job ingest).  Submit
+    times may arrive non-monotonic (archives merge queues); jobs are
+    re-sorted by submit time and re-based to t=0.  The cluster size is
+    taken from ``nodes=``, the trace's ``MaxNodes:``/``MaxProcs:`` header,
+    or the widest job seen — in that order.  Returns ``(jobs,
+    simconfig_overrides)`` matching the scenario-library contract, so
+    ``make_scenario("trace:path.swf")`` can hand the result straight to
+    ``Simulator``.
     """
     is_moldable = resolve_mode(mode, None)
     if isinstance(source, str) and "\n" in source:
@@ -278,6 +284,7 @@ def parse_swf(source, *, max_jobs: Optional[int] = None,
 
     header: Dict[str, int] = {}
     rows = []
+    n_malformed = n_cancelled = 0
     for raw in lines:
         s = raw.strip()
         if not s:
@@ -293,6 +300,7 @@ def parse_swf(source, *, max_jobs: Optional[int] = None,
             continue
         f = s.split()
         if len(f) < 5:
+            n_malformed += 1                  # partial record
             continue
         try:
             jid = int(f[0])
@@ -303,12 +311,20 @@ def parse_swf(source, *, max_jobs: Optional[int] = None,
                 procs = int(float(f[7]))      # fall back to requested procs
             mem_kb = float(f[6]) if len(f) > 6 else -1.0
         except ValueError:
+            n_malformed += 1
             continue
         if run_s <= 0 or procs <= 0:
+            n_cancelled += 1                  # cancelled/failed/zero-runtime
             continue
         rows.append((submit, jid, run_s, procs, mem_kb))
         if max_jobs is not None and len(rows) >= max_jobs:
             break
+    if n_malformed or n_cancelled:
+        warnings.warn(
+            f"parse_swf: skipped {n_malformed + n_cancelled} records "
+            f"({n_malformed} malformed/partial, {n_cancelled} "
+            f"cancelled/zero-runtime); {len(rows)} jobs kept",
+            stacklevel=2)
 
     # MaxNodes beats MaxProcs (whole-node allocation) wherever it appears
     # in the header — SWF imposes no directive order
@@ -477,7 +493,14 @@ class LiveJobSpec:
     attached by the cluster (an explicit ``dmr.App`` or its
     ``app_factory``).  ``params`` are the job's original malleability
     parameters clamped to the device pool; ``steps`` is the scaled-down
-    iteration count; ``submit_step`` the cluster tick of arrival."""
+    iteration count; ``submit_step`` the cluster tick of arrival.
+
+    ``submit_s`` carries the job's *original* (pre-scale-down) submit
+    time: the tick mapping can collide — two distinct submit seconds
+    rounding onto one cluster tick — and every consumer must break such
+    ties by ``(submit_step, submit_s, jid)`` so queue order is identical
+    no matter which engine (tick reference, event cluster, or the cosim
+    simulator) orders the arrivals."""
     jid: int
     app: AppProfile
     params: MalleabilityParams
@@ -485,6 +508,7 @@ class LiveJobSpec:
     steps: int
     moldable: bool
     malleable: bool
+    submit_s: float = 0.0
 
 
 def materialize_live(scenario, n_jobs: Optional[int] = None, *,
@@ -546,5 +570,6 @@ def materialize_live(scenario, n_jobs: Optional[int] = None, *,
                                       sched_iterations=inhibit),
             submit_step=int(round(j.submit_time / t_max * span)),
             steps=max(4, min(max_steps, j.app.iterations)),
-            moldable=j.moldable, malleable=j.malleable))
+            moldable=j.moldable, malleable=j.malleable,
+            submit_s=float(j.submit_time)))
     return specs

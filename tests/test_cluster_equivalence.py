@@ -1,0 +1,303 @@
+"""Differential harness: event-driven ``dmr.Cluster`` vs ``ReferenceCluster``.
+
+The two live-cluster engines must be bit-identical on everything
+observable — ``ClusterResult`` summaries (minus real wall-clock),
+per-job records and resize trails, timelines, the grant/release device
+log, and cosim crosscheck records.  Seeded sweeps over
+{algorithm2, energy, throughput} x {rigid, moldable} x
+{policy, cosim} always run; a hypothesis property test over random
+``LiveJobSpec`` workloads rides along when the library is installed
+(skipped otherwise — same guard as ``tests/test_engine_equivalence.py``).
+
+It also hosts the satellites that pin the cluster's inputs: the
+pool-accounting invariant both engines run under (promoted from
+``test_cluster.py``'s per-tick audit into ``check_pool_invariants``),
+``parse_swf`` edge-case regressions, and the ``materialize_live``
+arrival-collision tie-break.
+"""
+import dataclasses
+import warnings
+
+import pytest
+
+from repro.core.params import MalleabilityParams
+from repro.dmr.cluster import Cluster, ReferenceCluster
+from repro.rms.workload import (MOLDABLE, RIGID, AppProfile, LiveJobSpec,
+                                materialize_live, parse_swf)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+POLICIES = ["algorithm2", "energy", "throughput"]
+
+
+# ----------------------------------------------------------------------
+# the harness
+# ----------------------------------------------------------------------
+
+def _run(engine_cls, specs, *, n_devices=16, **kw):
+    # fresh spec copies per engine: tenants must not share mutable state
+    specs = [dataclasses.replace(s) for s in specs]
+    cluster = engine_cls.sched_only(specs, n_devices=n_devices, **kw)
+    return cluster, cluster.run()
+
+
+def assert_equivalent(specs, *, n_devices=16, **kw):
+    """Run both engines on copies of one workload; everything observable
+    must match bit-for-bit (wall_s is real time and is excluded)."""
+    cle, re_ = _run(Cluster, specs, n_devices=n_devices, **kw)
+    clr, rr = _run(ReferenceCluster, specs, n_devices=n_devices, **kw)
+
+    se, sr = re_.summary(), rr.summary()
+    se.pop("wall_s"), sr.pop("wall_s")
+    assert se == sr
+
+    def flat(res):
+        return [(r.jid, r.submit_step, r.start_tick, r.end_tick,
+                 r.start_procs, r.final_procs, tuple(r.resizes))
+                for r in res.records]
+    assert flat(re_) == flat(rr)
+    assert re_.timeline == rr.timeline
+    assert {j: [(e.action, e.from_procs, e.to_procs) for e in ev]
+            for j, ev in re_.events_by_jid.items()} == \
+           {j: [(e.action, e.from_procs, e.to_procs) for e in ev]
+            for j, ev in rr.events_by_jid.items()}
+    # device-level provenance: same devices granted/released to the same
+    # jobs in the same order
+    assert cle.grant_log == clr.grant_log
+    if kw.get("decisions") == "cosim":
+        assert cle.crosscheck(re_) == clr.crosscheck(rr)
+    return re_, rr
+
+
+SCENARIOS = ["steady", "bursty", "bimodal", "straggler-heavy"]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("mode", [MOLDABLE, RIGID])
+def test_engines_agree_across_scenarios(policy, mode):
+    for scen in SCENARIOS:
+        for seed in (0, 7):
+            specs = materialize_live(scen, n_jobs=12, device_count=16,
+                                     mode=mode, seed=seed)
+            assert_equivalent(specs, policy=policy)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_engines_agree_in_cosim_replay(policy):
+    specs = materialize_live("bursty", n_jobs=10, device_count=16, seed=3)
+    assert_equivalent(specs, policy=policy, decisions="cosim")
+
+
+def test_engines_agree_on_trace_materialization():
+    specs = materialize_live("trace:synthetic", n_jobs=30, device_count=32,
+                             seed=11)
+    assert_equivalent(specs, n_devices=32, policy="algorithm2")
+
+
+def test_engines_agree_with_timeline_and_audit_off():
+    # the trace-replay configuration: no per-tick sampling, no audit
+    # sweep — the *final* accounting check and all metrics still match
+    specs = materialize_live("steady", n_jobs=10, device_count=16, seed=5)
+    cle, re_ = _run(Cluster, specs, policy="algorithm2",
+                    record_timeline=False, audit=False)
+    clr, rr = _run(ReferenceCluster, specs, policy="algorithm2",
+                   record_timeline=False, audit=False)
+    se, sr = re_.summary(), rr.summary()
+    se.pop("wall_s"), sr.pop("wall_s")
+    assert se == sr
+    assert re_.timeline == {"tick": [], "allocated": [], "running": [],
+                            "completed": []}
+    assert cle.grant_log is None                # provenance off with audit
+
+
+def test_non_malleable_workload_agrees():
+    specs = materialize_live("steady", n_jobs=8, device_count=8,
+                             malleable=False, seed=2)
+    assert_equivalent(specs, n_devices=8, policy="algorithm2")
+
+
+# ----------------------------------------------------------------------
+# pool-accounting invariant (promoted from test_cluster's per-tick audit)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_cls", [Cluster, ReferenceCluster])
+def test_pool_invariants_hold_after_every_event(engine_cls):
+    """free + granted conserved, no double-grants, releases returned —
+    checked by ``check_pool_invariants`` after every tick (audit=True
+    wires it into the run loop) and independently from the grant log."""
+    specs = materialize_live("bursty", n_jobs=12, device_count=16, seed=9)
+    cluster, res = _run(engine_cls, specs, policy="algorithm2", audit=True)
+
+    pool = set(cluster._pool_ids)
+    held = {}                                   # device id -> jid
+    for kind, jid, ids in cluster.grant_log:
+        if kind == "grant":
+            for d in ids:
+                assert d in pool
+                assert d not in held, f"device {d} double-granted"
+                held[d] = jid
+        else:
+            for d in ids:
+                assert held.pop(d) == jid, \
+                    f"device {d} released by a non-owner"
+    assert not held                             # all grants returned
+    cluster.check_pool_invariants()             # end state, explicitly
+
+
+@pytest.mark.parametrize("engine_cls", [Cluster, ReferenceCluster])
+def test_pool_invariant_checker_detects_leaks(engine_cls):
+    specs = materialize_live("steady", n_jobs=4, device_count=8, seed=1)
+    cluster, _ = _run(engine_cls, specs, n_devices=8, policy="algorithm2")
+    cluster._idle = cluster._idle[1:]           # leak one device
+    with pytest.raises(RuntimeError, match="device accounting"):
+        cluster.check_pool_invariants(0)
+
+
+# ----------------------------------------------------------------------
+# hypothesis: random LiveJobSpec workloads
+# ----------------------------------------------------------------------
+
+def _profile(i, t1, steps, lo, hi, pref):
+    params = MalleabilityParams(lo, hi, pref)
+    return AppProfile(name=f"h{i}", t1=t1, f=0.9, alpha=0.7, c=0.1,
+                      min_start=lo, params=params, state_mb=1.0,
+                      iterations=steps)
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def live_workloads(draw):
+        n = draw(st.integers(min_value=1, max_value=10))
+        specs = []
+        for i in range(n):
+            lo = draw(st.integers(min_value=1, max_value=4))
+            hi = draw(st.integers(min_value=lo, max_value=8))
+            pref = draw(st.integers(min_value=lo, max_value=hi))
+            steps = draw(st.integers(min_value=4, max_value=12))
+            submit = draw(st.integers(min_value=0, max_value=30))
+            # deliberately collision-prone submit seconds: distinct jobs
+            # may share (submit_step, submit_s) so the jid tie-break runs
+            submit_s = float(draw(st.integers(min_value=0, max_value=3)))
+            moldable = draw(st.booleans())
+            malleable = draw(st.booleans())
+            specs.append(LiveJobSpec(
+                jid=i, app=_profile(i, 100.0 * (i + 1), steps, lo, hi, pref),
+                params=MalleabilityParams(
+                    lo, hi, pref,
+                    sched_iterations=draw(st.integers(0, 3))),
+                submit_step=submit, steps=steps, moldable=moldable,
+                malleable=malleable, submit_s=submit_s))
+        return specs
+
+    @settings(max_examples=40, deadline=None)
+    @given(specs=live_workloads(),
+           policy=st.sampled_from(POLICIES))
+    def test_random_workloads_agree(specs, policy):
+        assert_equivalent(specs, n_devices=8, policy=policy)
+else:                                                 # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_random_workloads_agree():
+        pass
+
+
+# ----------------------------------------------------------------------
+# parse_swf edge cases (satellite regressions)
+# ----------------------------------------------------------------------
+
+DIRTY_SWF = """\
+; MaxNodes: 32
+1 0 -1 100 4 -1 -1 4 200 -1 1 -1 -1 -1 -1 -1 -1 -1
+this line is not a record at all
+2 10 -1 50
+3 20 -1 0 8 -1 -1 8 100 -1 0 -1 -1 -1 -1 -1 -1 -1
+4 30 -1 80 0 -1 -1 0 100 -1 0 -1 -1 -1 -1 -1 -1 -1
+5 40 -1 abc 8 -1 -1 8 100 -1 1 -1 -1 -1 -1 -1 -1 -1
+6 25 -1 60 2 -1 -1 2 100 -1 1 -1 -1 -1 -1 -1 -1 -1
+"""
+
+
+def test_parse_swf_skips_dirty_records_with_one_warning():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        jobs, overrides = parse_swf(DIRTY_SWF)
+    # 1 kept; prose line + 2 (partial) + 5 (unparseable runtime)
+    # malformed; 3 (zero runtime) + 4 (zero procs) cancelled; 6 kept
+    assert [j.jid for j in jobs] == [1, 6]
+    assert overrides == {"nodes": 32}
+    msgs = [str(x.message) for x in w
+            if issubclass(x.category, UserWarning)
+            and "parse_swf" in str(x.message)]
+    assert len(msgs) == 1                       # aggregated, not per-line
+    assert "5 records" in msgs[0]
+    assert "3 malformed/partial" in msgs[0]
+    assert "2 cancelled/zero-runtime" in msgs[0]
+
+
+def test_parse_swf_clean_trace_warns_nothing():
+    clean = "1 0 -1 100 4 -1 -1 4 200 -1 1 -1 -1 -1 -1 -1 -1 -1\n"
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        jobs, _ = parse_swf(clean)
+    assert len(jobs) == 1
+    assert not [x for x in w if "parse_swf" in str(x.message)]
+
+
+def test_parse_swf_non_monotonic_submits_resorted():
+    trace = ("; MaxNodes: 16\n"
+             "1 100 -1 50 4 -1 -1 4 100 -1 1 -1 -1 -1 -1 -1 -1 -1\n"
+             "2 40 -1 50 4 -1 -1 4 100 -1 1 -1 -1 -1 -1 -1 -1 -1\n"
+             "3 70 -1 50 4 -1 -1 4 100 -1 1 -1 -1 -1 -1 -1 -1 -1\n")
+    jobs, _ = parse_swf(trace)                  # merged-queue archive order
+    assert [j.jid for j in jobs] == [2, 3, 1]
+    assert [j.submit_time for j in jobs] == [0.0, 30.0, 60.0]  # re-based
+
+
+def test_parse_swf_comment_only_and_empty_lines():
+    trace = ("; just a header\n\n;; double comment\n"
+             "1 5 -1 10 2 -1 -1 2 20 -1 1 -1 -1 -1 -1 -1 -1 -1\n\n")
+    jobs, _ = parse_swf(trace)
+    assert [j.jid for j in jobs] == [1]
+    assert jobs[0].submit_time == 0.0
+
+
+# ----------------------------------------------------------------------
+# materialize_live arrival-collision tie-break (satellite regression)
+# ----------------------------------------------------------------------
+
+def test_materialize_live_collisions_break_ties_by_original_submit():
+    # a dense trace squeezed onto a short tick clock guarantees multiple
+    # jobs collapse onto the same submit_step
+    specs = materialize_live("trace:synthetic", n_jobs=60, device_count=16,
+                             arrival_span=10, seed=4)
+    by_step = {}
+    for s in specs:
+        by_step.setdefault(s.submit_step, []).append(s)
+    assert any(len(v) > 1 for v in by_step.values()), \
+        "fixture regression: no tick collisions to exercise"
+    # submit_s carries the pre-scale submit second for deterministic order
+    assert all(s.submit_s >= 0.0 for s in specs)
+    assert any(s.submit_s > 0.0 for s in specs)
+    # and the engines agree on the collided workload (the original bug:
+    # queue order at a collided tick was engine-dependent)
+    assert_equivalent(specs, policy="algorithm2")
+    assert_equivalent(specs, policy="throughput", decisions="cosim")
+
+
+def test_cluster_arrival_order_is_submit_step_submit_s_jid():
+    params = MalleabilityParams(1, 2, 1)
+    mk = lambda jid, sub_s: LiveJobSpec(
+        jid=jid, app=_profile(jid, 50.0, 4, 1, 2, 1), params=params,
+        submit_step=0, steps=4, moldable=True, malleable=False,
+        submit_s=sub_s)
+    # listed out of order on purpose; all collide on tick 0
+    specs = [mk(2, 5.0), mk(0, 9.0), mk(1, 5.0)]
+    for engine_cls in (Cluster, ReferenceCluster):
+        cluster, _ = _run(engine_cls, specs, n_devices=2,
+                          policy="algorithm2")
+        order = [t.jid for t in cluster._arrival_order()]
+        assert order == [1, 2, 0]               # (step, submit_s, jid)
+    assert_equivalent(specs, n_devices=2, policy="algorithm2")
