@@ -231,26 +231,35 @@ def _replay_identical(a, b):
 
 
 def run_replay(speedup_jobs=100_000, million_jobs=1_000_000,
-               crosscheck_jobs=20_000, seed=0, trace=None):
+               crosscheck_jobs=20_000, seed=0, trace=None, trail_path=None):
     """The tentpole benchmark: event-cluster trace replay.
 
-    * ``speedup_jobs``: both engines replay the same materialized trace;
-      results must be bit-identical and the wall-clock ratio is the
-      headline speedup.
+    * ``speedup_jobs``: both engines replay the same materialized trace
+      with ``record_trail=True`` (same overhead on both sides, so the
+      ratio stays fair); results must be bit-identical and the
+      wall-clock ratio is the headline speedup.  The event engine's
+      schedule trail is dumped to ``trail_path`` and re-audited from
+      disk with ``repro.analysis`` — the race-detector CI artifact.
     * ``crosscheck_jobs``: the event engine replays the simulator's
       decisions (``decisions="cosim"``) and every resize trail is
       verified against the simulator's resize_log.
     * ``million_jobs``: event engine only, end-to-end scale proof
       (``0`` skips it — the smoke configuration).
     """
+    from repro.analysis import audit_trail_file, dump_trail
+
     t_start = time.perf_counter()
     payload = {}
 
     specs, nodes = _replay_specs(speedup_jobs, seed, trace=trace)
-    _, ev_res, ev_s = _replay_once("event", specs, nodes)
-    _, rf_res, rf_s = _replay_once("reference", specs, nodes)
+    ev_cl, ev_res, ev_s = _replay_once("event", specs, nodes,
+                                       record_trail=True)
+    rf_cl, rf_res, rf_s = _replay_once("reference", specs, nodes,
+                                       record_trail=True)
     assert _replay_identical(ev_res, rf_res), (
         "cluster engines diverged — run tests/test_cluster_equivalence")
+    assert ev_cl.trail == rf_cl.trail, (
+        "engines agreed on results but not on the schedule trail")
     payload["engine_speedup"] = {
         "n_jobs": len(specs), "nodes": nodes,
         "event_s": round(ev_s, 3), "reference_s": round(rf_s, 3),
@@ -262,6 +271,24 @@ def run_replay(speedup_jobs=100_000, million_jobs=1_000_000,
     }
     derived = [f"speedup:{payload['engine_speedup']['speedup']}x"
                f"@{len(specs)}jobs"]
+
+    # dump the event engine's trail and audit the artifact from disk —
+    # the same gate CI runs via `python -m repro.analysis audit`
+    trail_path = trail_path or os.path.join(
+        os.path.dirname(BENCH_JSON), "experiments", "bench",
+        "live_cluster_trail.json")
+    os.makedirs(os.path.dirname(trail_path), exist_ok=True)
+    dump_trail(ev_cl, trail_path)
+    t0 = time.perf_counter()
+    violations = audit_trail_file(trail_path)
+    audit_s = time.perf_counter() - t0
+    assert not violations, "\n".join(str(v) for v in violations)
+    payload["trail_audit"] = {
+        "n_events": len(ev_cl.trail), "violations": 0,
+        "audit_s": round(audit_s, 3), "path": trail_path,
+    }
+    derived.append(f"trail:{len(ev_cl.trail)}events"
+                   f"_audited_{round(audit_s, 2)}s")
 
     xs, xn = _replay_specs(crosscheck_jobs, seed, trace=trace)
     xcl, xres, _ = _replay_once("event", xs, xn, decisions="cosim")
@@ -315,16 +342,21 @@ def main():
                     help="override the replay speedup size")
     ap.add_argument("--trace", default=None,
                     help="replay a real SWF file instead of synthetic")
+    ap.add_argument("--trail-out", default=None,
+                    help="where to dump the audited schedule trail "
+                    "(default experiments/bench/live_cluster_trail.json)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.replay or args.replay_smoke:
         if args.replay_smoke:
             run_replay(speedup_jobs=args.replay_jobs or 2_000,
                        million_jobs=0, crosscheck_jobs=1_000,
-                       seed=args.seed, trace=args.trace)
+                       seed=args.seed, trace=args.trace,
+                       trail_path=args.trail_out)
         else:
             run_replay(speedup_jobs=args.replay_jobs or 100_000,
-                       seed=args.seed, trace=args.trace)
+                       seed=args.seed, trace=args.trace,
+                       trail_path=args.trail_out)
         return
     _ensure_device_farm()
     n_jobs = args.jobs or (6 if args.smoke else 10)

@@ -1,0 +1,489 @@
+"""AST lint pass over ``dmr.App`` user code and ``Policy`` implementations.
+
+Each rule encodes a malleability-contract bug class this repo has
+actually hit (or is structurally exposed to):
+
+======= ===============================================================
+code    rule
+======= ===============================================================
+DMR101  **stale-mesh-closure** — a step factory (``make_step``, an
+        ``@app.step`` function, or ``App(step=...)``) that returns or
+        closes over a *module-level jitted* callable.  A jitted closure
+        built once captures the first mesh's sharding constraints in
+        its trace cache and silently replays them after ``reconfig``
+        (the PR 1 bug class); step functions must be (re)built inside
+        the factory, per mesh.
+DMR102  **stateful-stateless-policy** — a ``Policy`` class that
+        declares ``decide_stateless = True`` (explicitly, or by
+        inheriting ``BasePolicy`` without overriding it) but writes
+        ``self.<attr>`` inside ``decide()``/``priority_key()``.  The
+        event engines cache and reorder stateless decisions
+        (``PendingMins`` collapsing, epoch memoization), so hidden
+        state desynchronizes the engines.
+DMR103  **unmatched-pattern-path** — a redistribution-``patterns`` dict
+        whose path prefix can never match the state tree built by the
+        module's ``init``/``shardings`` functions; the pattern would
+        silently fall back to the default for every leaf.
+DMR104  **deprecated-core-import** — importing the ``repro.core``
+        deprecation shims (``MalleableRunner``, ``ScriptedRMS``, ...)
+        instead of the ``repro.dmr`` facade.
+DMR105  **resize-in-inhibitor-window** — a scripted RMS schedule whose
+        consecutive decision steps are closer than the module's
+        ``sched_iterations`` inhibitor window: the later decision
+        cannot fire at its requested step (it is deferred to the next
+        query the §3.2 guard lets through).
+======= ===============================================================
+
+Suppress a finding with ``# dmr: ignore[DMR1xx]`` on the offending line.
+Entry points: :func:`lint_source` (one module), :func:`lint_paths`
+(files/directories — the ``python -m repro.analysis lint`` CLI).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Dict, List, Optional, Sequence, Set
+
+__all__ = ["LintFinding", "lint_source", "lint_paths", "RULES"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} {self.message}"
+
+
+# ----------------------------------------------------------------------
+# shared AST helpers
+# ----------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.jit' for Name/Attribute chains; '' for anything else."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _is_jit_call(node: ast.AST) -> bool:
+    """``jax.jit(...)`` / ``jit(...)`` / ``partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    name = _dotted(node.func)
+    if name in ("jit", "jax.jit", "pjit", "jax.pjit"):
+        return True
+    if name.endswith("partial") and node.args:
+        return _dotted(node.args[0]) in ("jit", "jax.jit", "pjit",
+                                         "jax.pjit")
+    return False
+
+
+def _has_jit_decorator(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        if _dotted(dec) in ("jit", "jax.jit", "pjit", "jax.pjit"):
+            return True
+        if isinstance(dec, ast.Call) and _is_jit_call(dec):
+            return True
+        if isinstance(dec, ast.Call) and _dotted(dec.func) in (
+                "jit", "jax.jit", "pjit", "jax.pjit"):
+            return True
+    return False
+
+
+def _local_names(fn: ast.AST) -> Set[str]:
+    """Names bound inside a function body: params, assignments, defs."""
+    names: Set[str] = set()
+    args = fn.args
+    for a in (args.posonlyargs + args.args + args.kwonlyargs):
+        names.add(a.arg)
+    if args.vararg:
+        names.add(args.vararg.arg)
+    if args.kwarg:
+        names.add(args.kwarg.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)) and node is not fn:
+            names.add(node.name)
+        elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = node.targets if isinstance(node, ast.Assign) \
+                else [node.target]
+            for t in targets:
+                for sub in ast.walk(t):
+                    if isinstance(sub, ast.Name):
+                        names.add(sub.id)
+        elif isinstance(node, ast.comprehension):
+            for sub in ast.walk(node.target):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+    return names
+
+
+def _ignored_lines(source: str) -> Dict[int, Set[str]]:
+    """``# dmr: ignore[DMR101]`` / ``# dmr: ignore`` suppressions."""
+    out: Dict[int, Set[str]] = {}
+    pat = re.compile(r"#\s*dmr:\s*ignore(?:\[([A-Z0-9, ]+)\])?")
+    for i, line in enumerate(source.splitlines(), start=1):
+        m = pat.search(line)
+        if m:
+            codes = {c.strip() for c in (m.group(1) or "").split(",")
+                     if c.strip()}
+            out[i] = codes or {"*"}
+    return out
+
+
+# ----------------------------------------------------------------------
+# DMR101 — stale-mesh-closure
+# ----------------------------------------------------------------------
+
+def _step_factories(tree: ast.Module) -> List[ast.AST]:
+    """Functions that are step factories: named ``make_step``, decorated
+    with ``@<app>.step``, or passed as ``step=`` to an ``App(...)``
+    constructor (def or lambda)."""
+    factories: List[ast.AST] = []
+    module_defs = {n.name: n for n in ast.walk(tree)
+                   if isinstance(n, ast.FunctionDef)}
+    seen: Set[int] = set()
+
+    def add(node: ast.AST) -> None:
+        if id(node) not in seen:
+            seen.add(id(node))
+            factories.append(node)
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            if node.name == "make_step":
+                add(node)
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Attribute) and dec.attr == "step":
+                    add(node)
+        elif isinstance(node, ast.Call):
+            callee = _dotted(node.func)
+            if callee.split(".")[-1] != "App":
+                continue
+            for kw in node.keywords:
+                if kw.arg != "step":
+                    continue
+                if isinstance(kw.value, ast.Lambda):
+                    add(kw.value)
+                elif isinstance(kw.value, ast.Name) and \
+                        kw.value.id in module_defs:
+                    add(module_defs[kw.value.id])
+    return factories
+
+
+def check_stale_mesh_closure(tree: ast.Module, path: str,
+                             source: str) -> List[LintFinding]:
+    # names bound at module level to jitted callables
+    jitted: Set[str] = set()
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef) and _has_jit_decorator(node):
+            jitted.add(node.name)
+        elif isinstance(node, ast.Assign) and _is_jit_call(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    jitted.add(t.id)
+    if not jitted:
+        return []
+    findings = []
+    for fac in _step_factories(tree):
+        local = _local_names(fac) if isinstance(
+            fac, (ast.FunctionDef, ast.AsyncFunctionDef)) else {
+                a.arg for a in fac.args.args}
+        body = fac.body if isinstance(fac.body, list) else [fac.body]
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Name) and \
+                        isinstance(node.ctx, ast.Load) and \
+                        node.id in jitted and node.id not in local:
+                    findings.append(LintFinding(
+                        path, node.lineno, "DMR101",
+                        f"step factory uses module-level jitted "
+                        f"'{node.id}': its trace cache captures the "
+                        f"first mesh's shardings and replays them after "
+                        f"reconfig — build the jitted step inside the "
+                        f"factory, per mesh"))
+    return findings
+
+
+# ----------------------------------------------------------------------
+# DMR102 — stateful stateless policy
+# ----------------------------------------------------------------------
+
+_STATELESS_BASES = {"BasePolicy", "Algorithm2Policy", "EnergyAwarePolicy",
+                    "ThroughputGreedyPolicy"}
+
+
+def check_stateful_stateless_policy(tree: ast.Module, path: str,
+                                    source: str) -> List[LintFinding]:
+    findings = []
+    for cls in ast.walk(tree):
+        if not isinstance(cls, ast.ClassDef):
+            continue
+        stateless: Optional[bool] = None
+        for node in cls.body:
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and \
+                            t.id == "decide_stateless" and \
+                            isinstance(node.value, ast.Constant):
+                        stateless = bool(node.value.value)
+        if stateless is None:
+            bases = {_dotted(b).split(".")[-1] for b in cls.bases}
+            if bases & _STATELESS_BASES:
+                stateless = True            # BasePolicy defaults to True
+        has_decide = any(isinstance(n, ast.FunctionDef) and
+                         n.name == "decide" for n in cls.body)
+        if not stateless or not has_decide:
+            continue
+        for fn in cls.body:
+            if not isinstance(fn, ast.FunctionDef) or \
+                    fn.name not in ("decide", "priority_key"):
+                continue
+            for node in ast.walk(fn):
+                targets = []
+                if isinstance(node, ast.Assign):
+                    targets = node.targets
+                elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                    targets = [node.target]
+                for t in targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self":
+                        findings.append(LintFinding(
+                            path, node.lineno, "DMR102",
+                            f"policy '{cls.name}' declares "
+                            f"decide_stateless=True but {fn.name}() "
+                            f"writes self.{t.attr} — the event engines "
+                            f"collapse and memoize stateless decisions, "
+                            f"so hidden state desynchronizes them; set "
+                            f"decide_stateless = False or move the "
+                            f"state into configure()"))
+    return findings
+
+
+# ----------------------------------------------------------------------
+# DMR103 — unmatched redistribution-pattern path
+# ----------------------------------------------------------------------
+
+def _state_tree_keys(tree: ast.Module) -> Optional[Set[str]]:
+    """Top-level state keys, from dict literals returned by
+    init/shardings functions (``init_state``/``state_shardings``/
+    ``@app.init``/``@app.shardings``/plain ``init``/``shardings``).
+    None when no such dict literal exists (check cannot run)."""
+    keys: Set[str] = set()
+    found = False
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        is_state_fn = fn.name in ("init", "init_state", "shardings",
+                                  "state_shardings")
+        for dec in fn.decorator_list:
+            if isinstance(dec, ast.Attribute) and \
+                    dec.attr in ("init", "shardings"):
+                is_state_fn = True
+        if not is_state_fn:
+            continue
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Return) and \
+                    isinstance(node.value, ast.Dict):
+                consts = [k for k in node.value.keys
+                          if isinstance(k, ast.Constant) and
+                          isinstance(k.value, str)]
+                if consts and len(consts) == len(node.value.keys):
+                    found = True
+                    keys.update(k.value for k in consts)
+    return keys if found else None
+
+
+def check_unmatched_pattern_path(tree: ast.Module, path: str,
+                                 source: str) -> List[LintFinding]:
+    keys = _state_tree_keys(tree)
+    if keys is None:
+        return []
+    findings = []
+    pattern_dicts: List[ast.Dict] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "patterns" and isinstance(kw.value, ast.Dict):
+                    pattern_dicts.append(kw.value)
+        elif isinstance(node, ast.Assign) and \
+                isinstance(node.value, ast.Dict):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and \
+                        t.id.lower() in ("patterns", "pattern_specs"):
+                    pattern_dicts.append(node.value)
+    for d in pattern_dicts:
+        for k in d.keys:
+            if not (isinstance(k, ast.Constant) and
+                    isinstance(k.value, str)):
+                continue
+            prefix = k.value.split("/")[0]
+            if prefix != "*" and prefix not in keys:
+                findings.append(LintFinding(
+                    path, k.lineno, "DMR103",
+                    f"pattern path '{k.value}' can never match: the "
+                    f"state tree's top-level keys are "
+                    f"{sorted(keys)} — every leaf would silently fall "
+                    f"back to the default pattern"))
+    return findings
+
+
+# ----------------------------------------------------------------------
+# DMR104 — deprecated repro.core shim imports
+# ----------------------------------------------------------------------
+
+_DEPRECATED: Dict[str, Set[str]] = {
+    "repro.core": {"MalleableRunner", "dmr_reconfig", "ScriptedRMS",
+                   "PolicyRMS", "FileRMS", "RMSClient", "LMTrainApp"},
+    "repro.core.api": {"MalleableRunner", "dmr_reconfig"},
+    "repro.core.rms_client": {"ScriptedRMS", "PolicyRMS", "FileRMS",
+                              "RMSClient"},
+    "repro.core.lm_app": {"LMTrainApp"},
+}
+
+_REPLACEMENT = {
+    "MalleableRunner": "repro.dmr.MalleableRunner",
+    "dmr_reconfig": "repro.dmr.reconfig",
+    "ScriptedRMS": "repro.dmr.ScriptedRMS",
+    "PolicyRMS": "repro.dmr.PolicyRMS",
+    "FileRMS": "repro.dmr.FileRMS",
+    "RMSClient": "repro.dmr.RMSConnector",
+    "LMTrainApp": "repro.core.lm_app.lm_train_app",
+}
+
+
+def check_deprecated_core_import(tree: ast.Module, path: str,
+                                 source: str) -> List[LintFinding]:
+    # the shim modules themselves legitimately define/re-export the names
+    norm = path.replace(os.sep, "/")
+    if "repro/core/" in norm or norm.endswith("repro/core"):
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ImportFrom) or node.module is None:
+            continue
+        deprecated = _DEPRECATED.get(node.module)
+        if not deprecated:
+            continue
+        for alias in node.names:
+            if alias.name in deprecated:
+                findings.append(LintFinding(
+                    path, node.lineno, "DMR104",
+                    f"'{alias.name}' from '{node.module}' is a "
+                    f"deprecation shim; import "
+                    f"{_REPLACEMENT[alias.name]} instead"))
+    return findings
+
+
+# ----------------------------------------------------------------------
+# DMR105 — scripted resize inside the inhibitor window
+# ----------------------------------------------------------------------
+
+def _int_kw(call: ast.Call, name: str) -> Optional[int]:
+    for kw in call.keywords:
+        if kw.arg == name and isinstance(kw.value, ast.Constant) and \
+                isinstance(kw.value.value, int):
+            return kw.value.value
+    return None
+
+
+def check_resize_in_inhibitor_window(tree: ast.Module, path: str,
+                                     source: str) -> List[LintFinding]:
+    windows: List[int] = []
+    schedules: List[ast.Dict] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        callee = _dotted(node.func).split(".")[-1]
+        if callee in ("set_parameters", "MalleabilityParams"):
+            k = _int_kw(node, "sched_iterations")
+            if k is not None and k > 1:
+                windows.append(k)
+        if callee in ("ScriptedRMS", "connect") and node.args and \
+                isinstance(node.args[0], ast.Dict):
+            schedules.append(node.args[0])
+    # only check when the module pins exactly one inhibitor window —
+    # with several, pairing schedules to windows is guesswork
+    if len(set(windows)) != 1 or not schedules:
+        return []
+    window = windows[0]
+    findings = []
+    for d in schedules:
+        steps = sorted(
+            (k.value, k.lineno) for k in d.keys
+            if isinstance(k, ast.Constant) and isinstance(k.value, int))
+        for (a, _), (b, line) in zip(steps, steps[1:]):
+            if b - a < window:
+                findings.append(LintFinding(
+                    path, line, "DMR105",
+                    f"scripted decisions at steps {a} and {b} are "
+                    f"closer than the sched_iterations={window} "
+                    f"inhibitor window — the step-{b} decision cannot "
+                    f"fire before step {a + window}"))
+    return findings
+
+
+# ----------------------------------------------------------------------
+# driver
+# ----------------------------------------------------------------------
+
+RULES = [
+    ("DMR101", check_stale_mesh_closure),
+    ("DMR102", check_stateful_stateless_policy),
+    ("DMR103", check_unmatched_pattern_path),
+    ("DMR104", check_deprecated_core_import),
+    ("DMR105", check_resize_in_inhibitor_window),
+]
+
+
+def lint_source(source: str, path: str = "<string>",
+                rules: Optional[Sequence[str]] = None) -> List[LintFinding]:
+    """Lint one module's source; returns findings sorted by line."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as exc:
+        return [LintFinding(path, exc.lineno or 0, "DMR100",
+                            f"syntax error: {exc.msg}")]
+    ignored = _ignored_lines(source)
+    findings: List[LintFinding] = []
+    for code, rule in RULES:
+        if rules is not None and code not in rules:
+            continue
+        for f in rule(tree, path, source):
+            codes = ignored.get(f.line, ())
+            if "*" in codes or f.code in codes:
+                continue
+            findings.append(f)
+    return sorted(findings, key=lambda f: (f.line, f.code))
+
+
+def lint_paths(paths: Sequence[str],
+               rules: Optional[Sequence[str]] = None) -> List[LintFinding]:
+    """Lint ``.py`` files under the given files/directories."""
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, dirs, names in os.walk(p):
+                dirs[:] = sorted(d for d in dirs
+                                 if not d.startswith((".", "__pycache__")))
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        elif p.endswith(".py"):
+            files.append(p)
+    findings: List[LintFinding] = []
+    for fp in files:
+        with open(fp, encoding="utf-8") as fh:
+            findings.extend(lint_source(fh.read(), fp, rules))
+    return findings

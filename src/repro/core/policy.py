@@ -317,6 +317,21 @@ POLICIES = {
 }
 
 
+def validate_policy(policy: Policy) -> Policy:
+    """Check a policy instance implements the callable core of the
+    :class:`Policy` protocol (``decide`` + ``priority_key``) before the
+    engines start consulting it — a missing method would otherwise
+    surface as an ``AttributeError`` deep inside a scheduling loop.
+    The deeper contract (``decide_stateless`` honesty, no hidden state)
+    is checked statically by ``repro.analysis`` rule DMR102."""
+    for attr in ("decide", "priority_key"):
+        if not callable(getattr(policy, attr, None)):
+            raise TypeError(
+                f"policy {policy!r} has no callable {attr}(); see "
+                f"repro.core.policy.Policy (or subclass BasePolicy)")
+    return policy
+
+
 def get_policy(policy: Union[str, Policy, None]) -> Policy:
     """Resolve a policy name / instance / None (-> Algorithm 2)."""
     if policy is None:
@@ -327,4 +342,4 @@ def get_policy(policy: Union[str, Policy, None]) -> Policy:
         except KeyError:
             raise KeyError(
                 f"unknown policy {policy!r}; known: {sorted(POLICIES)}")
-    return policy
+    return validate_policy(policy)

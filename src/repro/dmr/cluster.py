@@ -321,6 +321,11 @@ class _ClusterBase:
     (grant on start/expand, reclaim on shrink/completion), audited every
     tick against double-grants and leaks (``audit=False`` drops the
     per-tick sweep for trace-scale replays; a final audit always runs).
+    ``sanitize=True`` attaches the live ``repro.analysis`` trail auditor
+    — every grant/release/resize/start/finish is contract-checked as it
+    happens (``TrailViolation`` on the first bad event) — and
+    ``record_trail=True`` records the schedule trail without either
+    sweep, for offline ``repro.analysis.audit_trail`` (docs/analysis.md).
     ``record_timeline=False`` skips the per-tick timeline samples (again
     for scale); ``mesh_factory``/``redistribute`` are forwarded to every
     tenant's ``MalleableRunner`` (see :meth:`sched_only`).
@@ -334,6 +339,7 @@ class _ClusterBase:
                  loaded_w: float = 340.0, max_model_axis: int = 16,
                  max_ticks: int = 100_000, prewarm: bool = False,
                  record_timeline: bool = True, audit: bool = True,
+                 sanitize: bool = False, record_trail: bool = False,
                  mesh_factory: Optional[Callable] = None,
                  redistribute: Optional[Callable] = None):
         if decisions not in ("policy", "cosim"):
@@ -359,13 +365,22 @@ class _ClusterBase:
         self.prewarm = prewarm
         self.record_timeline = record_timeline
         self.audit = audit
+        #: ``sanitize=True`` attaches a live ``repro.analysis``
+        #: ``TrailAuditor`` to the run: every grant/release/resize/
+        #: start/finish event is checked as it happens and the first
+        #: contract violation raises ``TrailViolation`` (plus the
+        #: per-tick pool-conservation sweep, even with ``audit=False``).
+        self.sanitize = sanitize
+        self.record_trail = record_trail
         self.mesh_factory = mesh_factory
         self.redistribute = redistribute
-        #: grant/release provenance, recorded while ``audit`` is on:
-        #: ("grant" | "release", jid, (device ids...)) in event order —
-        #: the differential harness asserts both engines move the same
-        #: devices in the same order.
-        self.grant_log: Optional[List[Tuple[str, int, Tuple]]] = None
+        #: the schedule trail: ("start" | "grant" | "release" | "resize"
+        #: | "finish", jid, payload, tick) in event order, recorded while
+        #: ``audit`` / ``sanitize`` / ``record_trail`` is on — the
+        #: differential harness asserts both engines record identical
+        #: trails; ``repro.analysis.audit_trail`` checks the contract.
+        self.trail: Optional[List[Tuple[str, int, object, int]]] = None
+        self._sanitizer = None
 
         self.tenants = [self._as_tenant(entry, i)
                         for i, entry in enumerate(workload)]
@@ -478,29 +493,56 @@ class _ClusterBase:
 
     _audit = check_pool_invariants
 
+    @property
+    def grant_log(self) -> Optional[List[Tuple[str, int, Tuple]]]:
+        """Grant/release device provenance — the trail filtered down to
+        ("grant" | "release", jid, (device ids...)) triples, in event
+        order; ``None`` when no trail was recorded (``audit=False`` and
+        neither ``sanitize`` nor ``record_trail``)."""
+        if self.trail is None:
+            return None
+        return [(k, jid, p) for k, jid, p, _tick in self.trail
+                if k in ("grant", "release")]
+
+    def _trail_event(self, kind: str, jid: int, payload) -> None:
+        event = (kind, jid, payload, self._tick)
+        self.trail.append(event)
+        if self._sanitizer is not None:
+            self._sanitizer.feed(event)          # raises TrailViolation
+
     def _grant(self, t: _Tenant, need: int) -> None:
         grant = self._take(need)
         t.runner.grant_devices(grant)
-        if self.grant_log is not None:
-            self.grant_log.append(("grant", t.jid,
-                                   tuple(d.id for d in grant)))
+        if self.trail is not None:
+            self._trail_event("grant", t.jid, tuple(d.id for d in grant))
 
     def _reclaim(self, t: _Tenant, released: List) -> None:
         self._idle.extend(released)
-        if self.grant_log is not None:
-            self.grant_log.append(("release", t.jid,
-                                   tuple(d.id for d in released)))
+        if self.trail is not None:
+            self._trail_event("release", t.jid,
+                              tuple(d.id for d in released))
 
     # -- scheduling ------------------------------------------------------
     def _start(self, t: _Tenant, p: int, tick: int) -> None:
         t.rms = ClusterRMS(self, t)
         grant = self._take(p)
+        listener = None
+        if self.trail is not None:
+            self._trail_event("start", t.jid, p)
+            # feed the trail from the runner's own event log: the
+            # listener sees the resize that *actually* applied (after
+            # pool clamping / cosim boundary drains), not the decision
+            # the scheduler thought it made
+            listener = (lambda e, jid=t.jid: self._trail_event(
+                "resize", jid, (e.step, e.action, e.from_procs,
+                                e.to_procs)))
         t.runner = MalleableRunner(t.exec_app, t.params, t.rms,
                                    devices=grant, initial_procs=p,
                                    max_model_axis=self.max_model_axis,
                                    allow_partial=True,
                                    mesh_factory=self.mesh_factory,
-                                   redistribute=self.redistribute)
+                                   redistribute=self.redistribute,
+                                   event_listener=listener)
         if self.prewarm:
             t.runner.prewarm()
         t.state = t.runner.init()
@@ -509,9 +551,8 @@ class _ClusterBase:
         self._dequeue(t)
         self._running_add(t)
         self._note_start(t, tick)
-        if self.grant_log is not None:
-            self.grant_log.append(("grant", t.jid,
-                                   tuple(d.id for d in grant)))
+        if self.trail is not None:
+            self._trail_event("grant", t.jid, tuple(d.id for d in grant))
 
     # -- the per-query decision (ClusterRMS calls back here) ------------
     def _decide(self, t: _Tenant, step: int, current: int,
@@ -573,6 +614,8 @@ class _ClusterBase:
             t.final_procs = r.current
             t.events = r.events
             self._reclaim(t, r.shutdown())
+            if self.trail is not None:
+                self._trail_event("finish", t.jid, t.final_procs)
             self._note_finish(t)
             # drop the runner/state so a million completed tenants don't
             # pin device lists and app state; records read the captured
@@ -599,7 +642,17 @@ class _ClusterBase:
         if self.simwl is not None:
             self.simwl.reset()
         self._idle: List = list(self.devices)
-        self.grant_log = [] if self.audit else None
+        self.trail = [] if (self.audit or self.sanitize
+                            or self.record_trail) else None
+        self._sanitizer = None
+        if self.sanitize:
+            from repro.analysis.trail import TrailAuditor, job_metadata
+            # cosim completion drains replay several simulator decisions
+            # at one boundary step, so resize *spacing* is only a
+            # violation in live-policy mode
+            self._sanitizer = TrailAuditor(
+                self._pool_ids, jobs=job_metadata(self),
+                check_spacing=self.decisions != "cosim", live=True)
         self._setup_queues()
         done: List[_Tenant] = []
         arrivals = self._arrival_order()
@@ -637,7 +690,7 @@ class _ClusterBase:
                 timeline["allocated"].append(allocated)
                 timeline["running"].append(self._n_running())
                 timeline["completed"].append(len(done))
-            if self.audit:
+            if self.audit or self.sanitize:
                 self.check_pool_invariants(tick)
             tick = self._next_tick(tick, ai, arrivals, timeline, len(done))
         self.check_pool_invariants(tick)         # end-of-run: always

@@ -75,7 +75,8 @@ class MalleableRunner:
                  cluster_view: Optional[Callable[[], ClusterView]] = None,
                  initial_procs: Optional[int] = None,
                  allow_partial: bool = False,
-                 mesh_factory: Optional[Callable] = None):
+                 mesh_factory: Optional[Callable] = None,
+                 event_listener: Optional[Callable] = None):
         self.app = ensure_app(app)
         self.params = params
         self.devices = list(devices) if devices is not None else jax.devices()
@@ -119,6 +120,12 @@ class MalleableRunner:
         self.mesh = self._mesh_for(self.current)
         self._step_cache: Dict[int, Callable] = {}
         self.events: List[ResizeEvent] = []
+        #: optional pure observer ``fn(event)`` invoked on every appended
+        #: ResizeEvent — *after* pool clamping, so it sees the resize that
+        #: actually happened, including forced migrations and cosim
+        #: boundary-drain replays.  ``dmr.Cluster`` hooks its schedule
+        #: trail / live sanitizer here; listeners must not mutate state.
+        self.event_listener = event_listener
         self._last_query_step = -10 ** 9
         self._last_query_time = 0.0
 
@@ -267,10 +274,13 @@ class MalleableRunner:
         self._step_fn(target)          # compile (cached across resizes)
         recompile = time.perf_counter() - t0
         kind = action.kind if target != self.current else "migrate"
-        self.events.append(ResizeEvent(
+        event = ResizeEvent(
             step=step, action=kind, from_procs=self.current,
             to_procs=target, transfer=stats, recompile_s=recompile,
-            per_pattern=per_pattern))
+            per_pattern=per_pattern)
+        self.events.append(event)
+        if self.event_listener is not None:
+            self.event_listener(event)
         self.current = target
         self.mesh = new_mesh
         return state

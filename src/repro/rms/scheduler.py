@@ -113,6 +113,14 @@ class SimResult:
             return 0.0
         return float(np.mean([fn(j) for j in self.jobs]))
 
+    def audit(self) -> List:
+        """Offline resize-log audit (``repro.analysis``): rigid jobs are
+        never resized, per-job from/to chains are continuous, record
+        timestamps are non-decreasing.  Returns the violations (empty
+        list == clean)."""
+        from repro.analysis import audit_resize_log
+        return audit_resize_log(self.resize_log, self.jobs)
+
     def summary(self) -> Dict[str, float]:
         # degenerate workloads (empty, or all jobs at t=0 with no runtime)
         # yield well-defined zeros instead of NaN / ZeroDivision warnings

@@ -1,0 +1,298 @@
+"""repro.analysis AST linter: every rule has a seeded fixture that fires
+and a corrected twin that does not — including AST reproductions of the
+historical bug classes (PR 1 stale-mesh-closure for DMR101).  The final
+test is the CI gate run inline: ``src/`` + ``examples/`` lint clean.
+"""
+import os
+import textwrap
+
+from repro.analysis import lint_paths, lint_source
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _codes(src, **kw):
+    return [f.code for f in lint_source(textwrap.dedent(src), **kw)]
+
+
+# ----------------------------------------------------------------------
+# DMR101 — stale-mesh-closure (the PR 1 bug class)
+# ----------------------------------------------------------------------
+
+# the seed's actual bug shape: one module-level jitted train step shared
+# across meshes — its trace cache replays the first mesh's sharding
+# constraints after every reconfig
+BUGGY_SHARED_CLOSURE = """
+    import jax
+
+    @jax.jit
+    def train_step(state, batch):
+        return state
+
+    class LMApp:
+        def make_step(self, mesh):
+            return train_step
+"""
+
+BUGGY_SHARED_JIT_ASSIGN = """
+    import jax
+
+    def _impl(state, batch):
+        return state
+
+    shared = jax.jit(_impl)
+
+    def make_step(mesh):
+        def fn(state, i):
+            return shared(state, i), {}
+        return fn
+"""
+
+BUGGY_APP_KW_LAMBDA = """
+    import jax
+    from repro import dmr
+
+    @jax.jit
+    def f(state):
+        return state
+
+    app = dmr.App(init=lambda mesh: {}, step=lambda mesh: f)
+"""
+
+FIXED_PER_MESH_CLOSURE = """
+    import jax
+
+    def make_step(mesh):
+        @jax.jit
+        def train_step(state, batch):
+            return state
+        return train_step
+"""
+
+FIXED_DECORATED = """
+    import jax
+    from repro import dmr
+
+    app = dmr.App(name="x")
+
+    @app.step
+    def step(mesh):
+        jitted = jax.jit(lambda s: s)
+        def fn(state, i):
+            return jitted(state), {}
+        return fn
+"""
+
+
+def test_dmr101_fires_on_shared_jitted_closures():
+    assert "DMR101" in _codes(BUGGY_SHARED_CLOSURE)
+    assert "DMR101" in _codes(BUGGY_SHARED_JIT_ASSIGN)
+    assert "DMR101" in _codes(BUGGY_APP_KW_LAMBDA)
+
+
+def test_dmr101_quiet_on_per_mesh_closures():
+    assert "DMR101" not in _codes(FIXED_PER_MESH_CLOSURE)
+    assert "DMR101" not in _codes(FIXED_DECORATED)
+
+
+# ----------------------------------------------------------------------
+# DMR102 — stateful stateless policy
+# ----------------------------------------------------------------------
+
+BUGGY_STATEFUL = """
+    from repro.core.policy import BasePolicy
+
+    class CountingPolicy(BasePolicy):
+        name = "counting"
+        def decide(self, current, params, cluster, job=None):
+            self.calls = getattr(self, "calls", 0) + 1
+            return None
+"""
+
+BUGGY_EXPLICIT_FLAG = """
+    class P:
+        decide_stateless = True
+        def decide(self, current, params, cluster, job=None):
+            self.last = current
+            return None
+"""
+
+FIXED_DECLARED_STATEFUL = """
+    from repro.core.policy import BasePolicy
+
+    class CountingPolicy(BasePolicy):
+        name = "counting"
+        decide_stateless = False
+        def decide(self, current, params, cluster, job=None):
+            self.calls = getattr(self, "calls", 0) + 1
+            return None
+"""
+
+FIXED_CONFIGURE_STATE = """
+    from repro.core.policy import BasePolicy
+
+    class TunedPolicy(BasePolicy):
+        name = "tuned"
+        def configure(self, config):
+            self.threshold = config.nodes // 2
+        def decide(self, current, params, cluster, job=None):
+            return None
+"""
+
+
+def test_dmr102_fires_on_hidden_state():
+    assert "DMR102" in _codes(BUGGY_STATEFUL)
+    assert "DMR102" in _codes(BUGGY_EXPLICIT_FLAG)
+
+
+def test_dmr102_quiet_on_honest_policies():
+    assert "DMR102" not in _codes(FIXED_DECLARED_STATEFUL)
+    assert "DMR102" not in _codes(FIXED_CONFIGURE_STATE)
+
+
+# ----------------------------------------------------------------------
+# DMR103 — unmatched redistribution-pattern path
+# ----------------------------------------------------------------------
+
+BUGGY_PATTERN_PATH = """
+    from repro import dmr
+
+    def init(mesh):
+        return {"weights": 1, "opt": 2}
+
+    app = dmr.App(init=init,
+                  patterns={"optimizer/mu": "replicate",
+                            "weights": "blockcyclic:4"})
+"""
+
+FIXED_PATTERN_PATH = """
+    from repro import dmr
+
+    def init(mesh):
+        return {"weights": 1, "opt": 2}
+
+    app = dmr.App(init=init,
+                  patterns={"opt/mu": "replicate",
+                            "weights": "blockcyclic:4",
+                            "*": "default"})
+"""
+
+NO_DICT_LITERAL = """
+    from repro import dmr
+
+    def init(mesh):
+        return build_state(mesh)
+
+    app = dmr.App(init=init, patterns={"anything/goes": "replicate"})
+"""
+
+
+def test_dmr103_fires_on_unmatchable_prefix():
+    codes = _codes(BUGGY_PATTERN_PATH)
+    assert codes.count("DMR103") == 1           # only the bad key
+
+
+def test_dmr103_quiet_on_matching_and_unknown_trees():
+    assert "DMR103" not in _codes(FIXED_PATTERN_PATH)
+    # no dict-literal state tree -> the check cannot run, stays quiet
+    assert "DMR103" not in _codes(NO_DICT_LITERAL)
+
+
+# ----------------------------------------------------------------------
+# DMR104 — deprecated repro.core shim imports
+# ----------------------------------------------------------------------
+
+def test_dmr104_fires_on_shim_imports():
+    assert "DMR104" in _codes("from repro.core import MalleableRunner\n")
+    assert "DMR104" in _codes(
+        "from repro.core.rms_client import ScriptedRMS\n")
+    assert "DMR104" in _codes("from repro.core.lm_app import LMTrainApp\n")
+
+
+def test_dmr104_quiet_on_canonical_imports():
+    assert "DMR104" not in _codes(
+        "from repro.core import MalleabilityParams, Action\n")
+    assert "DMR104" not in _codes(
+        "from repro.core.lm_app import lm_train_app\n")
+    assert "DMR104" not in _codes(
+        "from repro.dmr import MalleableRunner, ScriptedRMS\n")
+    # the shim modules themselves are exempt
+    assert "DMR104" not in _codes(
+        "from repro.core.api import MalleableRunner\n",
+        path="src/repro/core/__init__.py")
+
+
+# ----------------------------------------------------------------------
+# DMR105 — scripted resize inside the inhibitor window
+# ----------------------------------------------------------------------
+
+BUGGY_WINDOW = """
+    from repro import dmr
+
+    params = dmr.set_parameters(2, 8, 4, sched_iterations=5)
+    rms = dmr.ScriptedRMS({3: 8, 6: 2})
+"""
+
+FIXED_WINDOW = """
+    from repro import dmr
+
+    params = dmr.set_parameters(2, 8, 4, sched_iterations=5)
+    rms = dmr.ScriptedRMS({3: 8, 9: 2})
+"""
+
+AMBIGUOUS_WINDOWS = """
+    from repro import dmr
+
+    p1 = dmr.set_parameters(2, 8, 4, sched_iterations=5)
+    p2 = dmr.set_parameters(2, 8, 4, sched_iterations=2)
+    rms = dmr.ScriptedRMS({3: 8, 4: 2})
+"""
+
+
+def test_dmr105_fires_inside_window():
+    assert "DMR105" in _codes(BUGGY_WINDOW)
+
+
+def test_dmr105_quiet_outside_window_and_when_ambiguous():
+    assert "DMR105" not in _codes(FIXED_WINDOW)
+    # two different windows in one module: pairing is guesswork, skip
+    assert "DMR105" not in _codes(AMBIGUOUS_WINDOWS)
+
+
+# ----------------------------------------------------------------------
+# suppressions, syntax errors, driver
+# ----------------------------------------------------------------------
+
+def test_inline_suppression():
+    src = ("from repro.core import MalleableRunner  "
+           "# dmr: ignore[DMR104]\n")
+    assert _codes(src) == []
+    src = "from repro.core import MalleableRunner  # dmr: ignore\n"
+    assert _codes(src) == []
+    # suppressing a different code does not mask the finding
+    src = ("from repro.core import MalleableRunner  "
+           "# dmr: ignore[DMR101]\n")
+    assert _codes(src) == ["DMR104"]
+
+
+def test_syntax_error_is_reported_not_raised():
+    assert _codes("def broken(:\n") == ["DMR100"]
+
+
+def test_lint_paths_walks_files(tmp_path):
+    good = tmp_path / "good.py"
+    good.write_text("from repro.dmr import MalleableRunner\n")
+    bad = tmp_path / "pkg" / "bad.py"
+    bad.parent.mkdir()
+    bad.write_text("from repro.core import ScriptedRMS\n")
+    findings = lint_paths([str(tmp_path)])
+    assert [f.code for f in findings] == ["DMR104"]
+    assert findings[0].path == str(bad)
+
+
+def test_repo_src_and_examples_lint_clean():
+    """The CI gate, inline: the library and the examples carry no
+    malleability-contract lint findings."""
+    findings = lint_paths([os.path.join(REPO, "src"),
+                           os.path.join(REPO, "examples")])
+    assert findings == [], "\n".join(str(f) for f in findings)

@@ -1,0 +1,438 @@
+"""repro.analysis schedule-trail race detector.
+
+Every detector gets a seeded-violation fixture: start from a *valid*
+trail recorded off a real ``Cluster.sched_only`` run, mutate exactly one
+aspect, and assert the intended detector (and only a related violation
+set) fires — so each check provably does work.  Live ``sanitize=True``
+runs across the engine x policy x mode grid ride along, plus the
+trace-scale offline audit and the dump/load artifact round-trip.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.analysis import (JobMeta, TrailAuditor, TrailViolation,
+                            audit_grant_log, audit_resize_log, audit_trail,
+                            audit_trail_file, dump_trail, job_metadata,
+                            load_trail)
+from repro.dmr.cluster import Cluster, ReferenceCluster
+from repro.rms.workload import MOLDABLE, RIGID, materialize_live
+
+POLICIES = ["algorithm2", "energy", "throughput"]
+
+
+def _cluster(specs, engine_cls=Cluster, **kw):
+    specs = [dataclasses.replace(s) for s in specs]
+    kw.setdefault("policy", "algorithm2")
+    return engine_cls.sched_only(specs, n_devices=16, **kw)
+
+
+def _recorded(seed=9, scenario="bursty", **kw):
+    """A real run with its trail: the base fixture every mutation uses."""
+    specs = materialize_live(scenario, n_jobs=12, device_count=16,
+                             seed=seed)
+    cl = _cluster(specs, record_trail=True, **kw)
+    cl.run()
+    assert cl.trail, "fixture regression: empty trail"
+    return cl
+
+
+def _kinds(violations):
+    return {v.kind for v in violations}
+
+
+# ----------------------------------------------------------------------
+# a valid trail audits clean; every seeded mutation is caught
+# ----------------------------------------------------------------------
+
+def test_valid_trail_audits_clean():
+    cl = _recorded()
+    assert audit_trail(cl.trail, cl._pool_ids,
+                       jobs=job_metadata(cl)) == []
+
+
+def _mutate(cl, fn):
+    """Audit a mutated copy of a valid trail; returns the violations."""
+    trail = [list(e) for e in cl.trail]
+    trail = fn([tuple(e) for e in trail])
+    return audit_trail(trail, cl._pool_ids, jobs=job_metadata(cl))
+
+
+def _first(trail, kind):
+    return next(i for i, e in enumerate(trail) if e[0] == kind)
+
+
+def test_detects_double_grant():
+    cl = _recorded()
+
+    def dup_grant(trail):
+        i = _first(trail, "grant")
+        return trail[:i + 1] + [trail[i]] + trail[i + 1:]
+    kinds = _kinds(_mutate(cl, dup_grant))
+    assert "double-grant" in kinds
+
+
+def test_detects_unknown_device():
+    cl = _recorded()
+
+    def alien(trail):
+        i = _first(trail, "grant")
+        k, jid, ids, tick = trail[i]
+        trail[i] = (k, jid, ids[:-1] + (9999,), tick)
+        return trail
+    kinds = _kinds(_mutate(cl, alien))
+    assert "unknown-device" in kinds
+
+
+def test_detects_release_before_grant_and_double_release():
+    cl = _recorded()
+
+    def early_release(trail):
+        i = _first(trail, "grant")
+        k, jid, ids, tick = trail[i]
+        return trail[:i] + [("release", jid, ids, tick)] + trail[i:]
+    assert "bad-release" in _kinds(_mutate(cl, early_release))
+
+    def double_release(trail):
+        i = _first(trail, "release")
+        return trail[:i + 1] + [trail[i]] + trail[i + 1:]
+    assert "bad-release" in _kinds(_mutate(cl, double_release))
+
+
+def test_detects_use_after_release_regrant():
+    cl = _recorded()
+
+    # release a device, then have *another* job release it again after
+    # it was re-granted: the second owner check fires
+    def non_owner(trail):
+        i = _first(trail, "release")
+        k, jid, ids, tick = trail[i]
+        return trail[:i + 1] + [("release", jid + 1, ids, tick)] + \
+            trail[i + 1:]
+    assert "bad-release" in _kinds(_mutate(cl, non_owner))
+
+
+def test_detects_leaked_devices():
+    cl = _recorded()
+
+    def drop_release(trail):
+        i = _first(trail, "release")
+        return trail[:i] + trail[i + 1:]
+    kinds = _kinds(_mutate(cl, drop_release))
+    assert "leaked-devices" in kinds
+
+
+def test_detects_rigid_resize():
+    cl = _recorded()
+    trail = list(cl.trail)
+    i = _first(trail, "resize")
+    jid = trail[i][1]
+    jobs = job_metadata(cl)
+    jobs[jid] = dataclasses.replace(jobs[jid], malleable=False)
+    kinds = _kinds(audit_trail(trail, cl._pool_ids, jobs=jobs))
+    assert "rigid-resize" in kinds
+
+
+def test_detects_rigid_start_size():
+    cl = _recorded()
+    trail = list(cl.trail)
+    i = _first(trail, "start")
+    jid, procs = trail[i][1], trail[i][2]
+    jobs = job_metadata(cl)
+    jobs[jid] = dataclasses.replace(jobs[jid], moldable=False,
+                                    max_procs=procs + 1)
+    kinds = _kinds(audit_trail(trail, cl._pool_ids, jobs=jobs))
+    assert "rigid-start-size" in kinds
+
+
+def test_detects_resize_out_of_range():
+    cl = _recorded()
+    trail = list(cl.trail)
+    i = _first(trail, "resize")
+    jid = trail[i][1]
+    to_procs = trail[i][2][3]
+    jobs = job_metadata(cl)
+    jobs[jid] = dataclasses.replace(jobs[jid], max_procs=to_procs - 1)
+    kinds = _kinds(audit_trail(trail, cl._pool_ids, jobs=jobs))
+    assert "resize-out-of-range" in kinds
+
+
+def test_detects_undersized_mesh():
+    """The PR 5 bug class: a resize target bigger than the devices the
+    job actually holds (a silently undersized mesh)."""
+    cl = _recorded()
+
+    def oversize(trail):
+        i = _first(trail, "resize")
+        k, jid, (step, kind, frm, to), tick = trail[i]
+        trail[i] = (k, jid, (step, "expand", frm, to + 64), tick)
+        return trail
+    kinds = _kinds(_mutate(cl, oversize))
+    assert "undersized-mesh" in kinds
+
+
+def test_detects_chain_discontinuity():
+    cl = _recorded()
+
+    def tamper(trail):
+        i = _first(trail, "resize")
+        k, jid, (step, kind, frm, to), tick = trail[i]
+        trail[i] = (k, jid, (step, kind, frm + 1, to), tick)
+        return trail
+    kinds = _kinds(_mutate(cl, tamper))
+    assert "chain-continuity" in kinds
+
+
+def test_detects_inhibitor_violation():
+    cl = _recorded()
+    trail = list(cl.trail)
+    i = _first(trail, "resize")
+    k, jid, (step, kind, frm, to), tick = trail[i]
+    # a second resize one step later, inside a sched_iterations=5 window
+    # (shrink back to the original size keeps the chain continuous and
+    # the held set large enough, isolating the spacing detector)
+    extra = (k, jid, (step + 1, "shrink", to, frm), tick)
+    trail.insert(i + 1, extra)
+    jobs = job_metadata(cl)
+    jobs[jid] = dataclasses.replace(jobs[jid], sched_iterations=5)
+    kinds = _kinds(audit_trail(trail, cl._pool_ids, jobs=jobs,
+                               expect_complete=False))
+    assert "inhibitor-violation" in kinds
+    # the same trail is legal when the window is open
+    jobs[jid] = dataclasses.replace(jobs[jid], sched_iterations=1)
+    kinds = _kinds(audit_trail(trail, cl._pool_ids, jobs=jobs,
+                               expect_complete=False))
+    assert "inhibitor-violation" not in kinds
+    # ... and exempt under cosim (check_spacing=False): the completion
+    # boundary drain legitimately compresses events
+    jobs[jid] = dataclasses.replace(jobs[jid], sched_iterations=5)
+    kinds = _kinds(audit_trail(trail, cl._pool_ids, jobs=jobs,
+                               check_spacing=False, expect_complete=False))
+    assert "inhibitor-violation" not in kinds
+
+
+def test_detects_lifecycle_violations():
+    cl = _recorded()
+    trail = list(cl.trail)
+    fi = _first(trail, "finish")
+    jid, procs = trail[fi][1], trail[fi][2]
+
+    # finish size disagreeing with the resize chain
+    bad = list(trail)
+    bad[fi] = ("finish", jid, procs + 1, bad[fi][3])
+    assert "final-procs-mismatch" in _kinds(
+        audit_trail(bad, cl._pool_ids, jobs=job_metadata(cl)))
+
+    # resize after completion
+    bad = list(trail)
+    bad.append(("resize", jid, (999, "expand", procs, procs + 1),
+                bad[fi][3] + 1))
+    assert "resize-after-finish" in _kinds(
+        audit_trail(bad, cl._pool_ids, jobs=job_metadata(cl)))
+
+    # a resize for a job that never started
+    bad = [("resize", 777, (0, "expand", 1, 2), 0)] + list(trail)
+    assert "resize-before-start" in _kinds(
+        audit_trail(bad, cl._pool_ids, jobs=job_metadata(cl)))
+
+    # double finish / truncated trail
+    bad = list(trail) + [trail[fi]]
+    assert "double-finish" in _kinds(
+        audit_trail(bad, cl._pool_ids, jobs=job_metadata(cl)))
+    assert "unfinished-job" in _kinds(
+        audit_trail(trail[:fi], cl._pool_ids, jobs=job_metadata(cl)))
+
+
+def test_live_auditor_conservation_check():
+    auditor = TrailAuditor([0, 1, 2, 3])
+    auditor.on_grant(1, (0, 1), 0)
+    auditor.check_conservation(2, 0)            # 2 free + 2 held: fine
+    assert auditor.violations == []
+    auditor.check_conservation(3, 1)            # 3 + 2 != 4
+    assert _kinds(auditor.violations) == {"pool-conservation"}
+
+
+# ----------------------------------------------------------------------
+# promoted grant-log checker (the old hand-rolled test walk)
+# ----------------------------------------------------------------------
+
+def test_audit_grant_log_detects_each_violation():
+    pool = [0, 1, 2, 3]
+    ok = [("grant", 1, (0, 1)), ("release", 1, (1,)),
+          ("grant", 2, (1, 2)), ("release", 2, (1, 2)),
+          ("release", 1, (0,))]
+    assert audit_grant_log(ok, pool) == []
+    assert "double-grant" in _kinds(audit_grant_log(
+        [("grant", 1, (0,)), ("grant", 2, (0,))], pool))
+    assert "unknown-device" in _kinds(audit_grant_log(
+        [("grant", 1, (7,))], pool))
+    assert "bad-release" in _kinds(audit_grant_log(
+        [("grant", 1, (0,)), ("release", 2, (0,))], pool))
+    assert "leaked-devices" in _kinds(audit_grant_log(
+        [("grant", 1, (0, 1)), ("release", 1, (1,))], pool))
+
+
+# ----------------------------------------------------------------------
+# simulator resize-log audit (SimResult.audit)
+# ----------------------------------------------------------------------
+
+def test_sim_resize_log_audit():
+    from repro.rms.scheduler import Simulator
+    from repro.rms.workload import make_workload
+
+    jobs = make_workload(n_jobs=16, seed=3, mode=MOLDABLE)
+    result = Simulator(jobs, policy="algorithm2").run()
+    assert result.n_resizes > 0, "fixture regression: no resizes"
+    assert result.audit() == []
+
+    # seeded violations on the same records
+    recs = list(result.resize_log)
+    r = recs[0]
+    rigid_jobs = [dataclasses.replace(j) for j in result.jobs]
+    for j in rigid_jobs:
+        if j.jid == r.jid:
+            j.malleable = False
+    assert "rigid-resize" in _kinds(audit_resize_log(recs, rigid_jobs))
+
+    broken = [dataclasses.replace(x) for x in recs]
+    per_jid = [i for i, x in enumerate(broken) if x.jid == r.jid]
+    if len(per_jid) >= 2:
+        i = per_jid[1]
+        broken[i] = dataclasses.replace(broken[i],
+                                        from_procs=broken[i].from_procs + 1)
+        assert "chain-continuity" in _kinds(
+            audit_resize_log(broken, result.jobs))
+    reordered = [dataclasses.replace(r, t=recs[-1].t + 1.0)] + recs[1:]
+    if any(x.jid == r.jid for x in recs[1:]):
+        assert "non-monotonic-time" in _kinds(
+            audit_resize_log(reordered, result.jobs))
+
+
+# ----------------------------------------------------------------------
+# live sanitize mode: both engines, policy x mode grid
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_cls", [Cluster, ReferenceCluster])
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("mode", [MOLDABLE, RIGID])
+def test_sanitize_mode_passes_live_grid(engine_cls, policy, mode):
+    specs = materialize_live("bursty", n_jobs=10, device_count=16,
+                             mode=mode, seed=4)
+    cl = _cluster(specs, engine_cls, policy=policy, sanitize=True)
+    res = cl.run()
+    assert len(res.records) == len(specs)
+    # the sanitizer saw every recorded event
+    assert cl._sanitizer.n_events == len(cl.trail)
+
+
+@pytest.mark.parametrize("engine_cls", [Cluster, ReferenceCluster])
+def test_sanitize_mode_passes_cosim(engine_cls):
+    specs = materialize_live("bimodal", n_jobs=10, device_count=16, seed=6)
+    cl = _cluster(specs, engine_cls, policy="throughput",
+                  decisions="cosim", sanitize=True)
+    res = cl.run()
+    cl.crosscheck(res)
+
+
+@pytest.mark.parametrize("engine_cls", [Cluster, ReferenceCluster])
+def test_sanitize_catches_live_corruption(engine_cls):
+    """A scheduler bug (devices vanishing on release) trips the live
+    sanitizer immediately — even with the audit sweep off."""
+    specs = materialize_live("bursty", n_jobs=10, device_count=16, seed=4)
+
+    class Leaky(engine_cls):
+        def _reclaim(self, t, released):
+            super()._reclaim(t, released[:-1])      # drop one device
+
+    cl = Leaky.sched_only([dataclasses.replace(s) for s in specs],
+                          n_devices=16, policy="algorithm2",
+                          audit=False, sanitize=True)
+    with pytest.raises((TrailViolation, RuntimeError)):
+        cl.run()
+
+
+@pytest.mark.parametrize("engine_cls", [Cluster, ReferenceCluster])
+def test_sanitize_catches_double_grant_live(engine_cls):
+    specs = materialize_live("bursty", n_jobs=10, device_count=16, seed=4)
+
+    class DoubleGranter(engine_cls):
+        def _grant(self, t, need):
+            # grant devices without taking them out of the idle pool:
+            # the classic double-accounting bug
+            grant = self._idle[:need]
+            t.runner.grant_devices(grant)
+            self._trail_event("grant", t.jid,
+                              tuple(d.id for d in grant))
+
+    cl = DoubleGranter.sched_only([dataclasses.replace(s) for s in specs],
+                                  n_devices=16, policy="algorithm2",
+                                  audit=False, sanitize=True)
+    with pytest.raises((TrailViolation, RuntimeError)):
+        cl.run()
+
+
+# ----------------------------------------------------------------------
+# grant_log property contract
+# ----------------------------------------------------------------------
+
+def test_grant_log_contract():
+    specs = materialize_live("steady", n_jobs=6, device_count=8, seed=2)
+    cl = _cluster(specs, audit=False)
+    cl.run()
+    assert cl.trail is None and cl.grant_log is None
+
+    cl = _cluster(specs, audit=False, record_trail=True)
+    cl.run()
+    assert cl.trail is not None
+    assert cl.grant_log == [(k, j, p) for k, j, p, _ in cl.trail
+                            if k in ("grant", "release")]
+    kinds = {e[0] for e in cl.trail}
+    assert kinds >= {"start", "grant", "release", "finish"}
+
+
+# ----------------------------------------------------------------------
+# artifact round-trip + trace-scale offline audit
+# ----------------------------------------------------------------------
+
+def test_dump_load_audit_roundtrip(tmp_path):
+    cl = _recorded()
+    path = str(tmp_path / "trail.json")
+    payload = dump_trail(cl, path)
+    assert payload["decisions"] == "policy"
+    data = load_trail(path)
+    assert data["pool_ids"] == list(cl._pool_ids)
+    assert data["trail"] == cl.trail
+    assert data["jobs"][cl.tenants[0].jid] == \
+        job_metadata(cl)[cl.tenants[0].jid]
+    assert audit_trail_file(path) == []
+
+    # corrupt the artifact -> the file audit catches it
+    raw = json.load(open(path))
+    g = next(i for i, e in enumerate(raw["trail"]) if e[0] == "grant")
+    raw["trail"].insert(g + 1, raw["trail"][g])
+    json.dump(raw, open(path, "w"))
+    assert any(v.kind == "double-grant" for v in audit_trail_file(path))
+
+
+def test_dump_without_trail_raises():
+    specs = materialize_live("steady", n_jobs=4, device_count=8, seed=1)
+    cl = _cluster(specs, audit=False)
+    cl.run()
+    with pytest.raises(ValueError, match="no trail"):
+        dump_trail(cl, "/tmp/never-written.json")
+
+
+def test_trace_scale_replay_trail_audits_clean():
+    """The offline detector at SWF trace scale: a synthetic-trace
+    sched_only replay's full trail audits clean, in O(events)."""
+    specs = materialize_live("trace:synthetic", n_jobs=2000,
+                             device_count=128, seed=0)
+    cl = Cluster.sched_only(specs, n_devices=128, policy="algorithm2",
+                            record_timeline=False, audit=False,
+                            record_trail=True, max_ticks=50_000_000)
+    cl.run()
+    assert len(cl.trail) >= 4 * len(specs)      # start+grant+release+finish
+    violations = audit_trail(cl.trail, cl._pool_ids,
+                             jobs=job_metadata(cl))
+    assert violations == []

@@ -20,6 +20,7 @@ import warnings
 
 import pytest
 
+from repro.analysis import audit_grant_log
 from repro.core.params import MalleabilityParams
 from repro.dmr.cluster import Cluster, ReferenceCluster
 from repro.rms.workload import (MOLDABLE, RIGID, AppProfile, LiveJobSpec,
@@ -66,8 +67,10 @@ def assert_equivalent(specs, *, n_devices=16, **kw):
            {j: [(e.action, e.from_procs, e.to_procs) for e in ev]
             for j, ev in rr.events_by_jid.items()}
     # device-level provenance: same devices granted/released to the same
-    # jobs in the same order
+    # jobs in the same order — and the full schedule trail (start/grant/
+    # release/resize/finish with ticks) must be identical too
     assert cle.grant_log == clr.grant_log
+    assert cle.trail == clr.trail
     if kw.get("decisions") == "cosim":
         assert cle.crosscheck(re_) == clr.crosscheck(rr)
     return re_, rr
@@ -128,23 +131,13 @@ def test_non_malleable_workload_agrees():
 def test_pool_invariants_hold_after_every_event(engine_cls):
     """free + granted conserved, no double-grants, releases returned —
     checked by ``check_pool_invariants`` after every tick (audit=True
-    wires it into the run loop) and independently from the grant log."""
+    wires it into the run loop) and independently from the grant log via
+    the promoted ``repro.analysis.audit_grant_log`` checker (the same
+    coverage this test used to hand-roll)."""
     specs = materialize_live("bursty", n_jobs=12, device_count=16, seed=9)
     cluster, res = _run(engine_cls, specs, policy="algorithm2", audit=True)
 
-    pool = set(cluster._pool_ids)
-    held = {}                                   # device id -> jid
-    for kind, jid, ids in cluster.grant_log:
-        if kind == "grant":
-            for d in ids:
-                assert d in pool
-                assert d not in held, f"device {d} double-granted"
-                held[d] = jid
-        else:
-            for d in ids:
-                assert held.pop(d) == jid, \
-                    f"device {d} released by a non-owner"
-    assert not held                             # all grants returned
+    assert audit_grant_log(cluster.grant_log, cluster._pool_ids) == []
     cluster.check_pool_invariants()             # end state, explicitly
 
 

@@ -11,13 +11,13 @@ import warnings; warnings.filterwarnings("ignore")
 import jax, numpy as np
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.core import MalleableRunner, MalleabilityParams, ScriptedRMS
-from repro.core.lm_app import LMTrainApp
+from repro.dmr import MalleabilityParams, MalleableRunner, ScriptedRMS
+from repro.core.lm_app import lm_train_app
 from repro.optim import AdamW
 
 cfg = get_config("granite-3-2b-smoke")
 shape = ShapeConfig("t", "train", 64, 8)
-app = LMTrainApp(cfg, shape, AdamW(learning_rate=1e-3), seed=0)
+app = lm_train_app(cfg, shape, AdamW(learning_rate=1e-3), seed=0)
 params = MalleabilityParams(2, 8, 4)
 
 r1 = MalleableRunner(app, params, ScriptedRMS({}))

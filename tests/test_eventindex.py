@@ -1,0 +1,153 @@
+"""Direct unit tests for ``repro.rms.eventindex`` — lazy deletion,
+bucket exhaustion, and priority/arrival tie-breaks, which until now were
+only exercised indirectly through the engine differential harnesses."""
+import pytest
+
+from repro.rms.eventindex import MinRequestIndex, PendingMins
+
+
+def _index(entries):
+    """entries: (key, lo, prio_key) triples; item == key for brevity."""
+    idx = MinRequestIndex()
+    for key, lo, prio in entries:
+        idx.push(key, key, lo, prio)
+    return idx
+
+
+# ----------------------------------------------------------------------
+# membership + counters
+# ----------------------------------------------------------------------
+
+def test_membership_and_counts():
+    idx = _index([("a", 2, (1,)), ("b", 4, (0,)), ("c", 2, (2,))])
+    assert len(idx) == 3 and bool(idx)
+    assert "a" in idx and "z" not in idx
+    assert idx["b"] == "b"
+    assert list(idx) == ["a", "b", "c"]          # arrival order
+    assert idx.counts == {2: 2, 4: 1}
+    assert idx.min_lo == 2
+
+    idx.discard("a")
+    assert idx.counts == {2: 1, 4: 1}
+    idx.discard("c")
+    assert idx.counts == {4: 1}
+    assert idx.min_lo == 4                       # bucket 2 exhausted
+    idx.discard("b")
+    assert not idx and idx.min_lo == float("inf")
+
+
+# ----------------------------------------------------------------------
+# best(): priority + arrival tie-breaks, lazy deletion
+# ----------------------------------------------------------------------
+
+def test_best_orders_by_priority_then_arrival():
+    idx = _index([("late", 1, (5,)), ("best", 1, (1,)), ("tied", 1, (1,))])
+    # equal priority keys: arrival sequence breaks the tie
+    assert idx.best(free=8, backfill=True) == "best"
+    idx.discard("best")
+    assert idx.best(free=8, backfill=True) == "tied"
+
+
+def test_best_respects_fit_only_when_backfilling():
+    idx = _index([("big", 8, (0,)), ("small", 2, (9,))])
+    # backfill scan: the 8-wide bucket does not fit in 4 free, so the
+    # worse-priority small job is served
+    assert idx.best(free=4, backfill=True) == "small"
+    # strict FCFS: blocked buckets still compete; the caller checks the
+    # winner's own fit and stops at a blocked head
+    assert idx.best(free=4, backfill=False) == "big"
+
+
+def test_best_lazily_deletes_discarded_entries():
+    idx = _index([("a", 2, (0,)), ("b", 2, (1,)), ("c", 2, (2,))])
+    idx.discard("a")
+    idx.discard("b")
+    # stale heads are popped on the way to a live entry
+    assert idx.best(free=8, backfill=True) == "c"
+    assert idx.best(free=8, backfill=True) == "c"    # repeatable
+
+
+def test_best_drops_exhausted_buckets():
+    idx = _index([("a", 2, (0,)), ("b", 4, (1,))])
+    idx.discard("a")
+    assert idx.best(free=8, backfill=True) == "b"
+    assert 2 not in idx._prio                    # exhausted bucket deleted
+    idx.discard("b")
+    assert idx.best(free=8, backfill=True) is None
+
+
+def test_rekey_invalidates_old_priority_entries():
+    idx = _index([("a", 2, (5,)), ("b", 2, (3,))])
+    assert idx.best(free=8, backfill=True) == "b"
+    # boost "a" ahead of "b" (the post-shrink boost path)
+    idx.rekey("a", (0,))
+    assert idx.best(free=8, backfill=True) == "a"
+    # re-key back down: the (0,) entry goes stale via the version bump
+    idx.rekey("a", (9,))
+    assert idx.best(free=8, backfill=True) == "b"
+
+
+def test_rebuild_rekeys_whole_queue():
+    idx = _index([("a", 2, None), ("b", 2, None), ("c", 4, None)])
+    # dynamic-priority mode pushed no priority entries yet
+    idx.rebuild(lambda item: (ord(item),))
+    assert idx.best(free=8, backfill=True) == "a"
+    idx.rebuild(lambda item: (-ord(item),))
+    assert idx.best(free=8, backfill=True) == "c"
+
+
+def test_push_without_priority_key_skips_priority_heap():
+    idx = _index([("a", 2, None)])
+    assert idx.best(free=8, backfill=True) is None   # no priority entries
+    assert idx.earliest_fitting(8) == "a"            # arrival heap exists
+
+
+# ----------------------------------------------------------------------
+# earliest_fitting(): the post-shrink boost scan
+# ----------------------------------------------------------------------
+
+def test_earliest_fitting_prefers_arrival_order_across_buckets():
+    idx = _index([("wide", 6, (0,)), ("narrow", 2, (0,)),
+                  ("later", 2, (0,))])
+    assert idx.earliest_fitting(8) == "wide"     # earliest overall
+    assert idx.earliest_fitting(4) == "narrow"   # wide doesn't fit
+    idx.discard("narrow")
+    assert idx.earliest_fitting(4) == "later"    # lazy-deleted head
+    assert idx.earliest_fitting(1) is None       # nothing fits
+
+
+def test_earliest_fitting_drops_exhausted_buckets():
+    idx = _index([("a", 2, (0,)), ("b", 4, (0,))])
+    idx.discard("a")
+    assert idx.earliest_fitting(8) == "b"
+    assert 2 not in idx._arrival
+
+
+# ----------------------------------------------------------------------
+# min_sizes() / PendingMins
+# ----------------------------------------------------------------------
+
+def test_min_sizes_literal_list_in_arrival_order():
+    idx = _index([("a", 4, (0,)), ("b", 2, (0,)), ("c", 4, (0,))])
+    assert idx.min_sizes(collapse=False) == [4, 2, 4]
+
+
+def test_pending_mins_collapses_duplicates_but_keeps_length():
+    idx = _index([("a", 4, (0,)), ("b", 2, (0,)), ("c", 4, (0,))])
+    mins = idx.min_sizes(collapse=True)
+    assert isinstance(mins, PendingMins)
+    assert len(mins) == 3 and bool(mins)         # true queue size
+    assert list(mins) == [2, 4]                  # distinct, ascending
+    assert min(mins) == 2                        # policy aggregates hold
+    assert any(x >= 4 for x in mins)
+    idx.discard("b")
+    idx.discard("a")
+    idx.discard("c")
+    empty = idx.min_sizes(collapse=True)
+    assert len(empty) == 0 and not empty and list(empty) == []
+
+
+def test_discard_missing_key_raises():
+    idx = _index([("a", 2, (0,))])
+    with pytest.raises(KeyError):
+        idx.discard("zz")

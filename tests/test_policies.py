@@ -256,3 +256,23 @@ class _FakeJob:
 def _cg():
     from repro.rms import APPS
     return APPS["cg"]
+
+
+def test_get_policy_validates_instances():
+    """Custom policy instances are protocol-checked up front (a missing
+    decide/priority_key would otherwise AttributeError mid-schedule)."""
+    from repro.core.policy import get_policy, validate_policy
+
+    class NotAPolicy:
+        name = "nope"
+
+    with pytest.raises(TypeError, match="decide"):
+        get_policy(NotAPolicy())
+
+    class HalfPolicy:
+        def decide(self, current, params, cluster, job=None):
+            return Action.none(current)
+
+    with pytest.raises(TypeError, match="priority_key"):
+        validate_policy(HalfPolicy())
+    assert get_policy(Algorithm2Policy()) is not None

@@ -6,11 +6,11 @@ import warnings; warnings.filterwarnings("ignore")
 import jax
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig
-from repro.core import MalleableRunner, MalleabilityParams, ScriptedRMS
-from repro.core.lm_app import LMTrainApp
+from repro.dmr import MalleabilityParams, MalleableRunner, ScriptedRMS
+from repro.core.lm_app import lm_train_app
 
 cfg = get_config("mamba2-370m-smoke")
-app = LMTrainApp(cfg, ShapeConfig("t", "train", 64, 8))
+app = lm_train_app(cfg, ShapeConfig("t", "train", 64, 8))
 runner = MalleableRunner(app, MalleabilityParams(2, 8, 4),
                          ScriptedRMS({2: 8, 4: 2}))
 warm_s = runner.prewarm()

@@ -62,11 +62,11 @@ def test_loss_gradients_chunked_vs_unchunked():
 def test_full_reconfig_loop_single_device():
     """The DMRlib loop degenerates gracefully on one device (no resize)."""
     from repro.configs.base import ShapeConfig
-    from repro.core import MalleabilityParams, MalleableRunner, ScriptedRMS
-    from repro.core.lm_app import LMTrainApp
+    from repro.dmr import MalleabilityParams, MalleableRunner, ScriptedRMS
+    from repro.core.lm_app import lm_train_app
 
     cfg = get_config("granite-3-2b-smoke")
-    app = LMTrainApp(cfg, ShapeConfig("t", "train", 32, 4))
+    app = lm_train_app(cfg, ShapeConfig("t", "train", 32, 4))
     runner = MalleableRunner(app, MalleabilityParams(1, 1, 1),
                              ScriptedRMS({2: 4}))   # clamped to max=1
     st = runner.init()
