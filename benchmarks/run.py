@@ -11,9 +11,9 @@ import traceback
 from benchmarks import (allocation_rate, energy, fault_tolerance,
                         kernels_bench, live_cluster, partial_malleability,
                         per_job_times, redistribution_overhead,
-                        scaling_study, scenario_suite, submission_modes,
-                        tpu_lm_workload, trace_replay, usability_sloc,
-                        workload_evolution, workload_speedup)
+                        scaling_study, scenario_suite, serving,
+                        submission_modes, tpu_lm_workload, trace_replay,
+                        usability_sloc, workload_evolution, workload_speedup)
 
 BENCHES = [
     ("fig3", scaling_study),
@@ -32,6 +32,7 @@ BENCHES = [
     ("scenarios", scenario_suite),
     ("trace_replay", trace_replay),
     ("live_cluster", live_cluster),
+    ("serving", serving),
 ]
 
 

@@ -18,6 +18,14 @@ identical trails — the differential harness asserts it)::
     ("resize",  jid, (step, kind, from_procs, to_procs),  tick)
     ("finish",  jid, final_procs,                         tick)
 
+``repro.serve``'s :class:`~repro.serve.replica.ReplicaSet` records the
+same stream with replica-lifecycle kinds — a replica is a job whose
+grant/release happens atomically with its up/down::
+
+    ("replica-up",   rid, (device ids...),                tick)
+    ("replica-down", rid, (device ids...),                tick)
+    ("request-drop", rid, (request id, wait_s, deadline_s), tick)
+
 :class:`TrailAuditor` consumes a trail one event at a time and checks
 the happens-before / interval contract:
 
@@ -50,6 +58,12 @@ violation kind       meaning
 ``resize-before-start`` / ``resize-after-finish`` / ``finish-before-
 start`` / ``double-finish`` / ``final-procs-mismatch``
                      lifecycle ordering violations
+``replica-already-up`` a serving replica brought up twice without an
+                     intervening ``replica-down``
+``replica-not-up``   a ``replica-down`` (or a drop attributed to a
+                     replica) for a replica that is not up
+``premature-drop``   a request dropped before its deadline elapsed —
+                     goodput thrown away that the queue still owed
 ==================== ==================================================
 
 Offline use (trace scale — the checker is O(events), never O(pool x
@@ -170,6 +184,12 @@ class TrailAuditor:
             self.on_start(jid, payload, tick)
         elif kind == "finish":
             self.on_finish(jid, payload, tick)
+        elif kind == "replica-up":
+            self.on_replica_up(jid, payload, tick)
+        elif kind == "replica-down":
+            self.on_replica_down(jid, payload, tick)
+        elif kind == "request-drop":
+            self.on_request_drop(jid, payload, tick)
         else:
             self._flag("unknown-event", jid, tick,
                        f"unrecognized trail event kind {kind!r}")
@@ -287,6 +307,51 @@ class TrailAuditor:
                        f"final_procs={final_procs} but the resize chain "
                        f"ends at {tracked}")
         self.finished.add(jid)
+
+    # -- serving (repro.serve) replica lifecycle -----------------------
+    def on_replica_up(self, rid: int, ids: Sequence[int], tick) -> None:
+        """A replica coming live is a start + grant in one event: the
+        device handoff is atomic with the lifecycle transition."""
+        if rid in self.started and rid not in self.finished:
+            self._flag("replica-already-up", rid, tick,
+                       f"replica brought up again with devices "
+                       f"{sorted(ids)} while already up")
+        meta = self._meta(rid)
+        n = len(ids)
+        if not meta.min_procs <= n <= meta.max_procs:
+            self._flag("start-out-of-range", rid, tick,
+                       f"replica size {n} outside "
+                       f"[{meta.min_procs}, {meta.max_procs}]")
+        self.started.add(rid)
+        self.finished.discard(rid)
+        self.current[rid] = n
+        self.on_grant(rid, ids, tick)
+
+    def on_replica_down(self, rid: int, ids: Sequence[int], tick) -> None:
+        if rid not in self.started or rid in self.finished:
+            self._flag("replica-not-up", rid, tick,
+                       "replica-down for a replica that is not up")
+        self.on_release(rid, ids, tick)
+        leftover = self.held.get(rid)
+        if leftover:
+            self._flag("leaked-devices", rid, tick,
+                       f"replica went down still holding devices "
+                       f"{sorted(leftover)}")
+        self.finished.add(rid)
+
+    def on_request_drop(self, rid: int, payload: Sequence, tick) -> None:
+        """``payload = (request id, wait_s, deadline_s)``; ``rid`` is the
+        holding replica, or -1 for a drop out of the waiting queue."""
+        req_id, wait_s, deadline_s = payload
+        if rid >= 0 and (rid not in self.started or rid in self.finished):
+            self._flag("replica-not-up", rid, tick,
+                       f"request {req_id} dropped by a replica that is "
+                       f"not up")
+        if deadline_s > 0 and wait_s + 1e-9 < deadline_s:
+            self._flag("premature-drop", rid, tick,
+                       f"request {req_id} dropped after waiting "
+                       f"{wait_s:.3f}s, before its {deadline_s:.3f}s "
+                       f"deadline")
 
     # ------------------------------------------------------------------
     def check_conservation(self, n_free: int, tick) -> None:

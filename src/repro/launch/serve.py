@@ -1,12 +1,17 @@
-"""Batched serving driver: prefill a prompt batch, then greedy-decode.
+"""Batched serving driver — a thin CLI over ``repro.serve``.
 
-Demonstrates the serving path (KV / SSM-state caches) end-to-end on host
-devices, including an elastic resize of the serving job between decode
-steps — the malleability point of an inference server is the step boundary,
-exactly as for training.
+Prefills a prompt batch, then greedy-decodes, as a malleable job: the
+decode path runs under a ``MalleableRunner`` (``repro.serve.
+make_decode_app``) and ``--resize-at``/``--resize-to`` schedule an
+elastic resize at a decode-step boundary through ``dmr.reconfig`` —
+params re-replicate and the KV/SSM caches re-shard through the
+redistribution-pattern registry, with bit-identical tokens before and
+after.  The heavy lifting lives in :func:`repro.serve.decode_demo`;
+this module only parses flags and prints.
 
   python -m repro.launch.serve --arch mamba2-370m-smoke --batch 4 \\
-      --prompt-len 32 --decode-steps 16
+      --prompt-len 32 --decode-steps 16 --host-devices 8 \\
+      --resize-at 40 --resize-to 8
 """
 import argparse
 import os
@@ -26,19 +31,9 @@ _early_devices()
 import warnings                                   # noqa: E402
 warnings.filterwarnings("ignore")
 
-import time                                       # noqa: E402
-
-import jax                                        # noqa: E402
-import jax.numpy as jnp                           # noqa: E402
-import numpy as np                                # noqa: E402
-
-from repro.configs import get_config              # noqa: E402
-from repro.models import model as M               # noqa: E402
-from repro.models.train import make_serve_step    # noqa: E402
-
 
 def main():
-    p = argparse.ArgumentParser()
+    p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", required=True)
     p.add_argument("--batch", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
@@ -46,42 +41,40 @@ def main():
     p.add_argument("--cache-len", type=int, default=128)
     p.add_argument("--host-devices", type=int, default=None)
     p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--resize-at", type=int, action="append", default=None,
+                   help="decode-path step index to resize at (repeatable; "
+                        "pairs up with --resize-to)")
+    p.add_argument("--resize-to", type=int, action="append", default=None,
+                   help="worker count to resize to at the matching "
+                        "--resize-at step")
     args = p.parse_args()
 
-    cfg = get_config(args.arch)
-    key = jax.random.PRNGKey(args.seed)
-    params = M.init_params(cfg, key)
-    B, P, S = args.batch, args.prompt_len, args.cache_len
+    ats, tos = args.resize_at or [], args.resize_to or []
+    if len(ats) != len(tos):
+        p.error("--resize-at and --resize-to must pair up")
+    schedule = dict(zip(ats, tos))
 
-    rng = np.random.default_rng(args.seed)
-    prompts = rng.integers(0, cfg.vocab_size, (B, P)).astype(np.int32)
+    from repro.serve import decode_demo
 
-    serve_step = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
-    cache = M.init_cache(cfg, B, S, enc_len=S)
+    out = decode_demo(args.arch, batch=args.batch,
+                      prompt_len=args.prompt_len,
+                      decode_steps=args.decode_steps,
+                      cache_len=args.cache_len,
+                      schedule=schedule, seed=args.seed)
 
-    # prefill: feed prompt tokens one step at a time through the decode path
-    # (prefill-by-decode keeps one executable; a fused prefill is the
-    # prefill_32k dry-run cell)
-    t0 = time.perf_counter()
-    tok = jnp.asarray(prompts[:, :1])
-    for i in range(P):
-        tok = jnp.asarray(prompts[:, i:i + 1])
-        nxt, cache = serve_step(params, cache, tok, jnp.int32(i))
-    prefill_s = time.perf_counter() - t0
-
-    outs = []
-    t0 = time.perf_counter()
-    tok = nxt
-    for i in range(args.decode_steps):
-        tok, cache = serve_step(params, cache, tok, jnp.int32(P + i))
-        outs.append(np.asarray(tok)[:, 0])
-    decode_s = time.perf_counter() - t0
-
-    toks = np.stack(outs, axis=1)
-    print(f"# {cfg.name}: batch {B}, prompt {P}, decoded {args.decode_steps}")
-    print(f"# prefill {prefill_s*1e3:.1f} ms, decode "
-          f"{decode_s/args.decode_steps*1e3:.2f} ms/token")
-    for b in range(min(B, 4)):
+    toks = out["tokens"]
+    print(f"# {args.arch}: batch {args.batch}, prompt {args.prompt_len}, "
+          f"decoded {args.decode_steps}")
+    print(f"# prefill {out['prefill_s']*1e3:.1f} ms, decode "
+          f"{out['decode_s']/args.decode_steps*1e3:.2f} ms/token")
+    for step, size in out["sizes"]:
+        print(f"# step {step}: {size} workers")
+    for ev in out["events"]:
+        print(f"# resize @ step {ev.step}: {ev.action} "
+              f"{ev.from_procs}->{ev.to_procs} "
+              f"({ev.transfer.bytes_moved/1e6:.1f} MB moved, "
+              f"recompile {ev.recompile_s*1e3:.0f} ms)")
+    for b in range(min(args.batch, 4)):
         print(f"seq[{b}]: {toks[b].tolist()}")
 
 

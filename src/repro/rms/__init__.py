@@ -5,7 +5,8 @@ from repro.rms.scheduler import (ReferenceSimulator, ResizeRecord, SimConfig,
                                  SimResult, Simulator, Timeline)
 from repro.rms.workload import (APPS, MOLDABLE, RIGID, SCENARIOS,
                                 SUBMISSION_MODES, AppProfile, Job,
-                                LiveJobSpec, bursty_arrivals,
+                                LiveJobSpec, UnknownScenarioError,
+                                bursty_arrivals, diurnal_arrivals,
                                 feitelson_arrivals, generate_synthetic_swf,
                                 make_scenario, make_workload,
                                 materialize_live, parse_swf)
@@ -14,7 +15,8 @@ __all__ = ["SimConfig", "SimResult", "Simulator", "ReferenceSimulator",
            "Timeline", "ResizeRecord",
            "APPS", "AppProfile", "Job", "feitelson_arrivals", "make_workload",
            "RIGID", "MOLDABLE", "SUBMISSION_MODES", "SCENARIOS",
-           "bursty_arrivals", "make_scenario",
+           "bursty_arrivals", "diurnal_arrivals", "make_scenario",
+           "UnknownScenarioError",
            "parse_swf", "generate_synthetic_swf",
            "LiveJobSpec", "materialize_live",
            "Policy", "BasePolicy", "Algorithm2Policy", "EnergyAwarePolicy",

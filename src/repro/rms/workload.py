@@ -394,6 +394,38 @@ def bursty_arrivals(n_jobs: int, rng: np.random.Generator,
     return np.cumsum(gaps)
 
 
+def diurnal_arrivals(n_jobs: int, rng: np.random.Generator,
+                     period_s: float = 86400.0,
+                     peak_to_trough: float = 4.0,
+                     mean_gap_s: float = 18.0) -> np.ndarray:
+    """Day/night arrival cycle: a non-homogeneous Poisson process whose
+    rate follows a sinusoid with the given peak:trough ratio over one
+    ``period_s`` cycle, starting at the trough.  Sampled by thinning
+    (Lewis & Shedler), so arrivals are exact for the modulated rate.
+
+    The mean rate is ``1 / mean_gap_s``; the instantaneous rate swings
+    between ``mean * 2r/(r+1)`` (peak) and ``mean * 2/(r+1)`` (trough)
+    for ``r = peak_to_trough``.  This is the serving-side counterpart of
+    ``bursty_arrivals``: slow load swell instead of campaign spikes.
+    """
+    if peak_to_trough < 1.0:
+        raise ValueError("peak_to_trough must be >= 1")
+    rate_mean = 1.0 / mean_gap_s
+    amp = (peak_to_trough - 1.0) / (peak_to_trough + 1.0)
+    rate_max = rate_mean * (1.0 + amp)
+    out = np.empty(n_jobs)
+    t, i = 0.0, 0
+    while i < n_jobs:
+        t += rng.exponential(1.0 / rate_max)
+        # phase -pi/2: t=0 sits at the trough, peak at period/2
+        rate_t = rate_mean * (1.0 + amp * math.sin(
+            2.0 * math.pi * t / period_s - math.pi / 2.0))
+        if rng.random() * rate_max < rate_t:
+            out[i] = t
+            i += 1
+    return out
+
+
 def _scaled_app(app: AppProfile, suffix: str, t1_scale: float,
                 max_procs: int) -> AppProfile:
     """Derive a size variant of an app (bimodal scenarios), keeping the
@@ -429,6 +461,15 @@ def _bimodal(n_jobs, mode, malleable, seed):
                          app_pool=pool), {}
 
 
+def _diurnal(n_jobs, mode, malleable, seed):
+    rng = np.random.default_rng(seed)
+    # span exactly one day-cycle regardless of n_jobs so the load swell
+    # is visible even in small smoke workloads
+    arr = diurnal_arrivals(n_jobs, rng, period_s=n_jobs * 18.0)
+    return make_workload(n_jobs, mode=mode, malleable=malleable, seed=seed,
+                         arrivals=arr), {}
+
+
 def _straggler_heavy(n_jobs, mode, malleable, seed):
     jobs = make_workload(n_jobs, mode=mode, malleable=malleable, seed=seed)
     return jobs, {"straggler_mtbf_s": 4000.0, "straggler_seed": seed}
@@ -445,9 +486,20 @@ SCENARIOS: Dict[str, Callable] = {
     "steady": _steady,
     "bursty": _bursty,
     "bimodal": _bimodal,
+    "diurnal": _diurnal,
     "straggler-heavy": _straggler_heavy,
     "energy-capped": _energy_capped,
 }
+
+
+class UnknownScenarioError(KeyError):
+    """Raised by ``make_scenario`` on an unregistered name.  Subclasses
+    ``KeyError`` (the registry is a dict lookup, and callers historically
+    catch that) but renders a readable multi-line message instead of
+    ``KeyError``'s quoted-repr string."""
+
+    def __str__(self) -> str:  # KeyError.__str__ would repr-quote this
+        return self.args[0]
 
 
 def make_scenario(name: str, n_jobs: int = 120, *, mode: str = MOLDABLE,
@@ -474,8 +526,11 @@ def make_scenario(name: str, n_jobs: int = 120, *, mode: str = MOLDABLE,
     try:
         fn = SCENARIOS[name]
     except KeyError:
-        raise KeyError(f"unknown scenario {name!r}; known: {sorted(SCENARIOS)}"
-                       " (or 'trace:<path.swf>' / 'trace:synthetic')")
+        names = "\n".join(f"  - {n}" for n in sorted(SCENARIOS))
+        raise UnknownScenarioError(
+            f"unknown scenario {name!r}; registered scenarios:\n{names}\n"
+            "or a trace form: 'trace:<path.swf>' (replay an SWF file) / "
+            "'trace:synthetic' (generated in memory)") from None
     return fn(n_jobs, mode, malleable, seed)
 
 

@@ -1,0 +1,41 @@
+"""``repro.serve`` — elastic LM inference serving on the malleability
+stack: latency SLOs, not makespan.
+
+The batch subsystems (``repro.rms``, ``dmr.Cluster``) answer "how fast
+does the queue drain?"; serving answers "of the requests users sent,
+how many came back within the SLO, and at what cost?".  Four modules:
+
+* :mod:`repro.serve.traffic` — request streams (diurnal / bursty /
+  bimodal / ``trace:`` arrivals reinterpreted from the scenario
+  library), the deadline queue, the replica load balancer.
+* :mod:`repro.serve.slo` — streaming percentile estimators (P²,
+  windowed) and the latency-objective policies ``slo-aware`` /
+  ``queue-depth`` (registered into ``repro.core.policy.POLICIES`` on
+  import).
+* :mod:`repro.serve.replica` — :func:`make_decode_app` (the decode
+  path as a ``dmr.App``; resize point = decode-step boundary) and
+  :class:`ReplicaSet` (the elastic fleet engine, trail-audited like
+  ``dmr.Cluster``).
+* :mod:`repro.serve.metrics` — goodput under SLO, tail-latency CDFs,
+  cost per million requests.
+
+See ``docs/serving.md`` and ``benchmarks/serving.py``.
+"""
+from repro.serve.metrics import (CDF_GRID, PRICE_PER_DEVICE_HOUR,
+                                 ServingMetrics)
+from repro.serve.replica import (Replica, ReplicaSet, ServeConfig,
+                                 ServingResult, decode_demo,
+                                 make_decode_app)
+from repro.serve.slo import (P2Estimator, QueueDepthPolicy, SLOAwarePolicy,
+                             SLOTracker, WindowedPercentile)
+from repro.serve.traffic import (LeastLoadedBalancer, Request, RequestQueue,
+                                 make_request_stream)
+
+__all__ = [
+    "Request", "RequestQueue", "LeastLoadedBalancer", "make_request_stream",
+    "P2Estimator", "WindowedPercentile", "SLOTracker",
+    "SLOAwarePolicy", "QueueDepthPolicy",
+    "ServingMetrics", "PRICE_PER_DEVICE_HOUR", "CDF_GRID",
+    "ServeConfig", "Replica", "ReplicaSet", "ServingResult",
+    "make_decode_app", "decode_demo",
+]

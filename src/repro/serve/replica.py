@@ -1,0 +1,573 @@
+"""Elastic LM serving: replicas as malleable jobs on one device pool.
+
+Two levels of elasticity, both built from the repo's malleability
+primitives rather than new machinery:
+
+* **Within a replica** — :func:`make_decode_app` wraps the prefill+
+  greedy-decode path (``make_serve_step``, the KV/SSM caches of
+  ``models/model.py``) as a ``dmr.App`` whose resize point is the
+  decode-step boundary.  The state is ``{"params", "cache", "tok",
+  "pos"}``; params re-shard by replication, the cache re-shards along
+  its batch axis through the ordinary redistribution-pattern registry —
+  an inference server grows and shrinks mid-generation exactly the way
+  a training job does between steps (see :func:`decode_demo`, driven by
+  ``python -m repro.launch.serve``).
+
+* **Across replicas** — :class:`ReplicaSet` runs a fleet of fixed-size
+  replicas against a request stream, growing and shrinking the *count*
+  of replicas under a resize policy.  The fleet is one malleable job
+  from the policy's point of view (``MalleabilityParams`` in device
+  units, resizes in whole-replica quanta); the serving surface the
+  latency policies read (``slo``, ``queue_len``, ``head_wait_s``,
+  ``utilization``) is the ReplicaSet itself, passed as the ``job``
+  handle.
+
+:class:`ReplicaSet` is a discrete-event engine in the mold of
+``dmr.Cluster``: one tick is one decode-step boundary
+(``ServeConfig.tick_s`` seconds), requests arrive / expire / dispatch /
+advance per tick, and every device handoff is recorded in the same
+trail format the cluster uses (``replica-up`` / ``replica-down`` /
+``request-drop`` events), so ``repro.analysis`` audits serving runs
+with the same machinery — including live ``sanitize=True``.  By default
+replicas are host-level service models (like ``Cluster.sched_only``, so
+benchmarks sweep thousands of requests in seconds); pass an
+``app_factory`` plus real devices and each replica steps a live
+``MalleableRunner`` every tick.
+
+The **service model**: a replica with ``d`` devices offers
+``slots_per_device × d`` concurrent sequences (continuous batching — up
+to the slot count, co-resident sequences decode at full per-step rate).
+An admitted request spends ``ceil(prompt_len / prefill_tokens_per_tick)``
+ticks in prefill, then one tick per generated token.  Deadlines bound
+*queue wait* (time-to-first-token patience): a request that waits past
+its deadline is dropped — the user navigated away — and counts zero
+goodput; once admitted, a request always completes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.params import MalleabilityParams
+from repro.core.policy import ClusterView, get_policy
+from repro.serve.metrics import ServingMetrics
+from repro.serve.slo import SLOTracker
+from repro.serve.traffic import LeastLoadedBalancer, Request, RequestQueue
+
+__all__ = ["ServeConfig", "Replica", "ReplicaSet", "ServingResult",
+           "make_decode_app", "decode_demo"]
+
+
+# ======================================================================
+# the decode path as a dmr.App (per-replica malleability)
+# ======================================================================
+
+def make_decode_app(cfg, *, batch: int, cache_len: int, seed: int = 0):
+    """The serving step as a ``dmr.App``: resize point = decode-step
+    boundary.
+
+    State pytree: ``{"params", "cache", "tok", "pos"}``.  Params stay
+    replicated (the ``{"params": "replicate"}`` pattern); cache leaves
+    shard along their batch axis across the whole mesh whenever
+    ``batch`` divides the device count, and the redistribution registry
+    moves them on resize like any other job state.  ``step(state, i,
+    feed)`` consumes ``feed`` (a ``(batch,)`` int array of prompt
+    tokens) when given — prefill-by-decode — and the previous step's
+    argmax otherwise; it returns ``(state, next_tokens)``.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import dmr
+    from repro.models import model as M
+    from repro.models.train import make_serve_step
+
+    def _shardings(mesh):
+        n = mesh.devices.size
+        rep = NamedSharding(mesh, P())
+
+        def shard_batch(aval):
+            shp = aval.shape
+            if batch % n == 0:
+                # cache leaves stack layers in front: batch sits at axis
+                # 1 for (L, B, ...) leaves, axis 0 for (B, ...) leaves
+                for ax in (1, 0):
+                    if ax < len(shp) and shp[ax] == batch:
+                        spec = [None] * len(shp)
+                        spec[ax] = ("data", "model")
+                        return NamedSharding(mesh, P(*spec))
+            return rep
+
+        cache_a = jax.eval_shape(
+            lambda: M.init_cache(cfg, batch, cache_len, enc_len=cache_len))
+        tok_s = shard_batch(
+            jax.ShapeDtypeStruct((batch, 1), jnp.int32))
+        return {
+            "params": jax.tree.map(lambda _: rep, M.abstract_params(cfg)),
+            "cache": jax.tree.map(shard_batch, cache_a),
+            "tok": tok_s,
+            "pos": rep,
+        }
+
+    def _init(mesh):
+        ss = _shardings(mesh)
+        params = jax.device_put(
+            M.init_params(cfg, jax.random.PRNGKey(seed)), ss["params"])
+        cache = jax.device_put(
+            M.init_cache(cfg, batch, cache_len, enc_len=cache_len),
+            ss["cache"])
+        tok = jax.device_put(jnp.zeros((batch, 1), jnp.int32), ss["tok"])
+        pos = jax.device_put(jnp.zeros((), jnp.int32), ss["pos"])
+        return {"params": params, "cache": cache, "tok": tok, "pos": pos}
+
+    def _step(mesh):
+        # one jitted closure per mesh: the runner swaps executables on
+        # resize, and a shared trace would bake in the first mesh
+        ss = _shardings(mesh)
+        serve_impl = make_serve_step(cfg)
+
+        def _advance(state):
+            nxt, cache = serve_impl(state["params"], state["cache"],
+                                    state["tok"], state["pos"])
+            return {"params": state["params"], "cache": cache,
+                    "tok": nxt, "pos": state["pos"] + 1}
+
+        advance = jax.jit(_advance, in_shardings=(ss,), out_shardings=ss,
+                          donate_argnums=(0,))
+
+        def step_fn(state, i, feed=None):
+            if feed is not None:
+                tok = jax.device_put(
+                    jnp.asarray(feed, jnp.int32).reshape(batch, 1),
+                    ss["tok"])
+                state = {**state, "tok": tok}
+            state = advance(state)
+            return state, state["tok"]
+
+        return step_fn
+
+    name = getattr(cfg, "name", "lm")
+    return dmr.App(init=_init, shardings=_shardings, step=_step,
+                   patterns={"params": "replicate"},
+                   name=f"decode-{name}")
+
+
+def decode_demo(arch: str, *, batch: int = 4, prompt_len: int = 16,
+                decode_steps: int = 16, cache_len: int = 128,
+                schedule: Optional[Dict[int, int]] = None,
+                devices: Optional[List] = None, seed: int = 0) -> Dict:
+    """Prefill + greedy decode under a ``MalleableRunner``, resizing at
+    decode-step boundaries through ``dmr.reconfig``.
+
+    ``schedule`` is a ``{step: target_workers}`` dict (``dmr.connect``'s
+    scripted form); the default resizes nobody.  Returns ``{"tokens":
+    (batch, decode_steps) array, "events": [ResizeEvent...], "sizes":
+    [(step, workers)...], "prefill_s", "decode_s"}``.
+    """
+    import time
+
+    import jax
+
+    from repro import dmr
+    from repro.configs import get_config
+
+    cfg = get_config(arch)
+    devices = list(devices) if devices is not None else jax.devices()
+    hi = 1 << (len(devices).bit_length() - 1)         # largest pow2 <= pool
+    params = MalleabilityParams(1, hi, min(hi, max(1, hi // 2)))
+    app = make_decode_app(cfg, batch=batch, cache_len=cache_len, seed=seed)
+    runner = dmr.MalleableRunner(app, params, rms=dict(schedule or {}),
+                                 devices=devices[:hi])
+    state = runner.init()
+
+    rng = np.random.default_rng(seed)
+    prompts = rng.integers(0, cfg.vocab_size, (batch, prompt_len),
+                           dtype=np.int32)
+    sizes: List[Tuple[int, int]] = [(0, runner.current)]
+    outs: List[np.ndarray] = []
+    t0 = time.perf_counter()
+    prefill_s = 0.0
+    total = prompt_len + decode_steps
+    for i in range(total):
+        state = dmr.reconfig(runner, state, i)
+        if sizes[-1][1] != runner.current:
+            sizes.append((i, runner.current))
+        feed = prompts[:, i] if i < prompt_len else None
+        state, tok = runner.step(state, i, feed)
+        if i >= prompt_len - 1:
+            outs.append(np.asarray(tok)[:, 0])
+        if i == prompt_len - 1:
+            prefill_s = time.perf_counter() - t0
+            t0 = time.perf_counter()
+    decode_s = time.perf_counter() - t0
+    tokens = np.stack(outs[:decode_steps], axis=1)
+    return {"tokens": tokens, "events": list(runner.events),
+            "sizes": sizes, "prefill_s": prefill_s, "decode_s": decode_s}
+
+
+# ======================================================================
+# the fleet engine
+# ======================================================================
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Fleet shape + service model + SLO knobs for :class:`ReplicaSet`."""
+    devices_per_replica: int = 2
+    min_replicas: int = 1
+    max_replicas: int = 8
+    initial_replicas: int = 2
+    slots_per_device: int = 4        # concurrent sequences per device
+    prefill_tokens_per_tick: int = 256
+    tick_s: float = 0.02             # seconds per decode-step boundary
+    resize_every: int = 10           # ticks between policy consults
+    timeline_every: int = 10         # ticks between timeline samples
+    slo_p99_s: float = 4.0
+    estimator: str = "window"        # "window" | "p2"
+    window: int = 512
+
+
+class _ReplicaTenant:
+    """Per-replica metadata shim so ``job_metadata`` / ``dump_trail``
+    treat a ReplicaSet like a cluster (a replica is a rigid job)."""
+    __slots__ = ("jid", "malleable", "moldable", "params")
+
+    def __init__(self, rid: int, n_devices: int):
+        self.jid = rid
+        self.malleable = False
+        self.moldable = False
+        self.params = MalleabilityParams(n_devices, n_devices, n_devices)
+
+
+class Replica:
+    """One fixed-size serving replica: a device grant, ``slots``
+    concurrent sequences, and (in live mode) a ``MalleableRunner``
+    stepping the decode app each tick."""
+
+    def __init__(self, rid: int, devices: Sequence, cfg: ServeConfig,
+                 runner=None):
+        self.rid = rid
+        self.devices = list(devices)
+        self.slots = cfg.slots_per_device * len(self.devices)
+        self.active: List[Request] = []
+        self.draining = False
+        self.runner = runner
+        self.state = runner.init() if runner is not None else None
+        self._tick_i = 0
+
+    @property
+    def free_slots(self) -> int:
+        return 0 if self.draining else self.slots - len(self.active)
+
+    def admit(self, req: Request, now_s: float, cfg: ServeConfig) -> None:
+        req.start_s = now_s
+        req.replica = self.rid
+        req._prefill_left = max(1, -(-req.prompt_len
+                                     // cfg.prefill_tokens_per_tick))
+        req._decode_left = req.decode_len
+        self.active.append(req)
+
+    def advance(self, now_s: float, cfg: ServeConfig) -> List[Request]:
+        """One tick of service; returns requests that just finished."""
+        if self.runner is not None:
+            self.state, _ = self.runner.step(self.state, self._tick_i)
+        self._tick_i += 1
+        done: List[Request] = []
+        for req in self.active:
+            if req._prefill_left > 0:
+                req._prefill_left -= 1
+            else:
+                req._decode_left -= 1
+                if req._decode_left <= 0:
+                    req.finish_s = now_s + cfg.tick_s
+                    done.append(req)
+        if done:
+            gone = set(id(r) for r in done)
+            self.active = [r for r in self.active if id(r) not in gone]
+        return done
+
+
+@dataclasses.dataclass
+class ServingResult:
+    """Outcome of one :meth:`ReplicaSet.run`."""
+    requests: List[Request]
+    metrics: ServingMetrics
+    ticks: int
+    tick_s: float
+    device_ticks: int
+    peak_devices: int
+    n_scale_ups: int
+    n_scale_downs: int
+    timeline: List[Tuple[int, int, int]]      # (tick, replicas, devices)
+    trail: Optional[List[Tuple]]
+
+    @property
+    def makespan_s(self) -> float:
+        return self.ticks * self.tick_s
+
+    @property
+    def mean_devices(self) -> float:
+        return self.device_ticks / self.ticks if self.ticks else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        out = self.metrics.summary(horizon_s=self.makespan_s,
+                                   device_ticks=self.device_ticks,
+                                   tick_s=self.tick_s)
+        out.update(peak_devices=self.peak_devices,
+                   mean_devices=self.mean_devices,
+                   n_scale_ups=self.n_scale_ups,
+                   n_scale_downs=self.n_scale_downs)
+        return out
+
+
+class ReplicaSet:
+    """Serve a request stream on an elastic replica fleet.
+
+    ``devices`` is the shared pool — an int builds a synthetic pool
+    (host service model; the default, and what benchmarks use), a list
+    of real devices plus ``app_factory`` (a zero-arg callable returning
+    a ``dmr.App``) runs a live ``MalleableRunner`` per replica.
+
+    ``policy`` is any ``repro.core.policy`` name/instance; the serving
+    policies (``slo-aware``, ``queue-depth``) read this ReplicaSet as
+    their ``job`` handle.  ``static_replicas=k`` disables elasticity:
+    ``k`` replicas at tick 0, never resized — the provisioning baseline.
+
+    Trail/auditing mirrors ``dmr.Cluster``: ``record_trail`` keeps the
+    event stream (``.trail`` / ``dump_trail`` compatible),
+    ``sanitize=True`` feeds a live :class:`TrailAuditor` that raises at
+    the first accounting violation.
+    """
+
+    def __init__(self, requests: Sequence[Request], devices=16, *,
+                 policy="slo-aware", config: Optional[ServeConfig] = None,
+                 static_replicas: Optional[int] = None,
+                 app_factory: Optional[Callable] = None,
+                 record_trail: bool = True, sanitize: bool = False,
+                 max_ticks: int = 10_000_000):
+        from repro.dmr.cluster import synthetic_pool
+
+        self.requests = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
+        if isinstance(devices, int):
+            pool = synthetic_pool(devices)
+        else:
+            pool = list(devices)
+        self._idle: List = list(pool)
+        self._pool_ids = [d.id for d in pool]
+        self.config = cfg = config or ServeConfig()
+        if cfg.devices_per_replica * cfg.max_replicas > len(pool) and \
+                static_replicas is None:
+            raise ValueError(
+                f"pool of {len(pool)} devices cannot host max_replicas="
+                f"{cfg.max_replicas} x {cfg.devices_per_replica} devices")
+        self.app_factory = app_factory
+        self.static = static_replicas
+        if static_replicas is not None:
+            if static_replicas * cfg.devices_per_replica > len(pool):
+                raise ValueError(
+                    f"static_replicas={static_replicas} needs "
+                    f"{static_replicas * cfg.devices_per_replica} devices, "
+                    f"pool has {len(pool)}")
+            self.policy = None
+            self.decisions = "static"
+        else:
+            self.policy = get_policy(policy)
+            self.policy.configure(cfg)
+            self.decisions = self.policy.name
+        dpr = cfg.devices_per_replica
+        self.params = MalleabilityParams(
+            dpr * cfg.min_replicas, dpr * cfg.max_replicas,
+            dpr * max(cfg.min_replicas, min(cfg.initial_replicas,
+                                            cfg.max_replicas)))
+        self.slo = SLOTracker(cfg.slo_p99_s, estimator=cfg.estimator,
+                              window=cfg.window)
+        self.metrics = ServingMetrics(cfg.slo_p99_s)
+        self.queue = RequestQueue()
+        self.balancer = LeastLoadedBalancer()
+        self._replicas: List[Replica] = []
+        self._tenant_meta: Dict[int, _ReplicaTenant] = {}
+        self._next_rid = 0
+        self._tick = 0
+        self._now = 0.0
+        self.max_ticks = max_ticks
+        self.n_scale_ups = 0
+        self.n_scale_downs = 0
+        self.peak_devices = 0
+        self.device_ticks = 0
+        self.timeline: List[Tuple[int, int, int]] = []
+        self.trail: Optional[List[Tuple]] = \
+            [] if (record_trail or sanitize) else None
+        self._auditor = None
+        if sanitize:
+            from repro.analysis.trail import TrailAuditor
+            self._auditor = TrailAuditor(self._pool_ids, jobs={},
+                                         check_spacing=False, live=True)
+
+    # -- serving surface read by the latency policies (the job handle) --
+    @property
+    def queue_len(self) -> int:
+        return len(self.queue)
+
+    @property
+    def head_wait_s(self) -> float:
+        return self.queue.head_wait_s(self._now)
+
+    @property
+    def in_flight(self) -> int:
+        return sum(len(r.active) for r in self._replicas)
+
+    @property
+    def utilization(self) -> float:
+        slots = sum(r.slots for r in self._replicas if not r.draining)
+        if slots == 0:
+            return 1.0
+        busy = sum(len(r.active) for r in self._replicas if not r.draining)
+        return busy / slots
+
+    @property
+    def resize_quantum(self) -> int:
+        return self.config.devices_per_replica
+
+    @property
+    def slots_per_replica(self) -> int:
+        return self.config.slots_per_device * self.config.devices_per_replica
+
+    # -- dump_trail / job_metadata compatibility ------------------------
+    @property
+    def tenants(self) -> List[_ReplicaTenant]:
+        return list(self._tenant_meta.values())
+
+    # -- internals ------------------------------------------------------
+    def _trail_event(self, kind: str, jid: int, payload) -> None:
+        if self.trail is not None:
+            self.trail.append((kind, jid, payload, self._tick))
+        if self._auditor is not None:
+            self._auditor.feed((kind, jid, payload, self._tick))
+
+    def _live(self) -> List[Replica]:
+        return [r for r in self._replicas if not r.draining]
+
+    def _replica_up(self) -> Optional[Replica]:
+        dpr = self.config.devices_per_replica
+        if len(self._idle) < dpr:
+            return None
+        devs = [self._idle.pop() for _ in range(dpr)]
+        rid = self._next_rid
+        self._next_rid += 1
+        self._tenant_meta[rid] = _ReplicaTenant(rid, dpr)
+        if self._auditor is not None:
+            from repro.analysis.trail import JobMeta
+            self._auditor.jobs[rid] = JobMeta(
+                malleable=False, moldable=False,
+                min_procs=dpr, max_procs=dpr)
+        runner = None
+        if self.app_factory is not None:
+            from repro import dmr
+            n = len(devs)
+            runner = dmr.MalleableRunner(
+                self.app_factory(), MalleabilityParams(n, n, n), rms={},
+                devices=devs)
+        rep = Replica(rid, devs, self.config, runner=runner)
+        self._replicas.append(rep)
+        self._trail_event("replica-up", rid, tuple(d.id for d in devs))
+        return rep
+
+    def _replica_down(self, rep: Replica) -> None:
+        self._trail_event("replica-down", rep.rid,
+                          tuple(d.id for d in rep.devices))
+        self._idle.extend(rep.devices)
+        self._replicas.remove(rep)
+
+    def _drop(self, req: Request) -> None:
+        req.dropped = True
+        self.metrics.drop(req)
+        self._trail_event(
+            "request-drop", -1,
+            (req.rid, round(req.wait_s(self._now), 6), req.deadline_s))
+
+    def _consult(self) -> None:
+        current = sum(len(r.devices) for r in self._live())
+        view = ClusterView(available=len(self._idle),
+                           pending_min_sizes=[], reclaimable_others=0)
+        act = self.policy.decide(current, self.params, view, job=self)
+        dpr = self.config.devices_per_replica
+        if act.kind == "expand" and act.target > current:
+            n_new = (min(act.target, self.params.max_procs) - current) // dpr
+            for _ in range(n_new):
+                if len(self._live()) >= self.config.max_replicas:
+                    break
+                if self._replica_up() is not None:
+                    self.n_scale_ups += 1
+        elif act.kind == "shrink" and act.target < current:
+            n_drop = (current - max(act.target,
+                                    self.params.min_procs)) // dpr
+            # drain emptiest-first, newest on ties: oldest replicas keep
+            # the load (matches the balancer's low-rid tie-break)
+            victims = sorted(self._live(),
+                             key=lambda r: (len(r.active), -r.rid))
+            for rep in victims[:n_drop]:
+                if len(self._live()) <= self.config.min_replicas:
+                    break
+                rep.draining = True
+                self.n_scale_downs += 1
+
+    # -- the engine -----------------------------------------------------
+    def run(self) -> ServingResult:
+        cfg = self.config
+        n_start = self.static if self.static is not None \
+            else max(cfg.min_replicas, min(cfg.initial_replicas,
+                                           cfg.max_replicas))
+        for _ in range(n_start):
+            if self._replica_up() is None:
+                raise RuntimeError("pool too small for the starting fleet")
+        arr_i = 0
+        reqs = self.requests
+        while True:
+            self._now = now = self._tick * cfg.tick_s
+            while arr_i < len(reqs) and reqs[arr_i].arrival_s <= now:
+                self.queue.push(reqs[arr_i])
+                arr_i += 1
+            for req in self.queue.expire(now):
+                self._drop(req)
+            while len(self.queue):
+                rep = self.balancer.pick(self._replicas)
+                if rep is None:
+                    break
+                rep.admit(self.queue.pop(), now, cfg)
+            held = sum(len(r.devices) for r in self._replicas)
+            self.device_ticks += held
+            self.peak_devices = max(self.peak_devices, held)
+            if self._tick % cfg.timeline_every == 0:
+                self.timeline.append((self._tick, len(self._replicas), held))
+            for rep in list(self._replicas):
+                for req in rep.advance(now, cfg):
+                    self.slo.observe(req.latency_s())
+                    self.metrics.complete(req)
+            for rep in [r for r in self._replicas
+                        if r.draining and not r.active]:
+                self._replica_down(rep)
+            if self._auditor is not None:
+                self._auditor.check_conservation(len(self._idle), self._tick)
+            if self.policy is not None and \
+                    self._tick % cfg.resize_every == 0:
+                self._consult()
+            if arr_i >= len(reqs) and not len(self.queue) and \
+                    not any(r.active for r in self._replicas):
+                break
+            self._tick += 1
+            if self._tick > self.max_ticks:
+                raise RuntimeError(
+                    f"serving run exceeded max_ticks={self.max_ticks}")
+        for rep in list(self._replicas):
+            self._replica_down(rep)
+        if self._auditor is not None:
+            self._auditor.check_conservation(len(self._idle), self._tick)
+        return ServingResult(
+            requests=list(self.requests), metrics=self.metrics,
+            ticks=self._tick + 1, tick_s=cfg.tick_s,
+            device_ticks=self.device_ticks, peak_devices=self.peak_devices,
+            n_scale_ups=self.n_scale_ups, n_scale_downs=self.n_scale_downs,
+            timeline=self.timeline, trail=self.trail)

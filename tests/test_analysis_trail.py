@@ -423,6 +423,98 @@ def test_dump_without_trail_raises():
         dump_trail(cl, "/tmp/never-written.json")
 
 
+# ----------------------------------------------------------------------
+# serving replica-lifecycle events (repro.serve trails)
+# ----------------------------------------------------------------------
+
+def _served():
+    """A valid serving trail off a real elastic ReplicaSet run."""
+    from repro.serve import ReplicaSet, make_request_stream
+    reqs = make_request_stream("diurnal", 400, horizon_s=20.0, seed=5)
+    rs = ReplicaSet(reqs, devices=16, policy="slo-aware", record_trail=True)
+    rs.run()
+    assert rs.trail and any(e[0] == "replica-up" for e in rs.trail), \
+        "fixture regression: no replica lifecycle events"
+    return rs
+
+
+def _mutate_serving(rs, fn):
+    trail = fn([tuple(e) for e in rs.trail])
+    return audit_trail(trail, rs._pool_ids, jobs=job_metadata(rs),
+                       check_spacing=False)
+
+
+def test_serving_trail_audits_clean():
+    rs = _served()
+    assert _mutate_serving(rs, lambda t: t) == []
+
+
+def test_detects_replica_double_up():
+    rs = _served()
+
+    def dup(trail):
+        i = _first(trail, "replica-up")
+        return trail[:i + 1] + [trail[i]] + trail[i + 1:]
+    kinds = _kinds(_mutate_serving(rs, dup))
+    assert "replica-already-up" in kinds
+    assert "double-grant" in kinds            # the devices are re-granted
+
+
+def test_detects_replica_down_without_up():
+    rs = _served()
+
+    def orphan_down(trail):
+        i = _first(trail, "replica-up")
+        k, rid, ids, tick = trail[i]
+        return [("replica-down", 999, ids, tick)] + trail
+    kinds = _kinds(_mutate_serving(rs, orphan_down))
+    assert "replica-not-up" in kinds
+
+
+def test_detects_dropped_replica_down():
+    rs = _served()
+
+    def lose_down(trail):
+        i = _first(trail, "replica-down")
+        return trail[:i] + trail[i + 1:]
+    kinds = _kinds(_mutate_serving(rs, lose_down))
+    assert "leaked-devices" in kinds and "unfinished-job" in kinds
+
+
+def test_detects_premature_request_drop():
+    rs = _served()
+
+    # a queue drop claiming only 1s of wait against an 8s deadline
+    def early_drop(trail):
+        i = _first(trail, "replica-up")
+        tick = trail[i][3]
+        return trail[:i + 1] + \
+            [("request-drop", -1, (12345, 1.0, 8.0), tick)] + trail[i + 1:]
+    kinds = _kinds(_mutate_serving(rs, early_drop))
+    assert "premature-drop" in kinds
+
+    # zero-deadline (infinite patience) drops are always premature-free
+    def no_deadline_drop(trail):
+        i = _first(trail, "replica-up")
+        tick = trail[i][3]
+        return trail[:i + 1] + \
+            [("request-drop", -1, (12345, 0.5, 0.0), tick)] + trail[i + 1:]
+    assert "premature-drop" not in _kinds(_mutate_serving(rs,
+                                                          no_deadline_drop))
+
+
+def test_detects_drop_by_unknown_replica():
+    rs = _served()
+
+    def ghost(trail):
+        i = _first(trail, "replica-up")
+        tick = trail[i][3]
+        return trail[:i + 1] + \
+            [("request-drop", 999, (7, 9.0, 8.0), tick)] + trail[i + 1:]
+    kinds = _kinds(_mutate_serving(rs, ghost))
+    assert "replica-not-up" in kinds
+
+
 def test_trace_scale_replay_trail_audits_clean():
     """The offline detector at SWF trace scale: a synthetic-trace
     sched_only replay's full trail audits clean, in O(events)."""

@@ -37,6 +37,52 @@ def test_flash_attention(B, H, Hkv, Sq, Sk, D, causal, window, dtype):
                                np.asarray(exp, np.float32), atol=tol, rtol=tol)
 
 
+DECODE_CASES = [
+    # (B, H, Hkv, Sk, D) — single-token query (Sq=1) against a growing
+    # KV cache, the serving decode step.  Non-power-of-two batches mixed
+    # in: serving batches track request admission, not tiling.
+    (3, 4, 2, 128, 64),
+    (3, 4, 2, 256, 64),
+    (3, 4, 2, 384, 64),      # growing cache length across these three
+    (5, 8, 1, 256, 64),      # non-pow2 batch, MQA
+    (7, 2, 2, 192, 32),      # non-pow2 batch and cache length
+    (1, 4, 4, 512, 128),
+]
+
+
+@pytest.mark.parametrize("B,H,Hkv,Sk,D", DECODE_CASES)
+def test_flash_attention_decode_step(B, H, Hkv, Sk, D):
+    """Decode-shaped attention: one query token attending over the whole
+    cache (no mask — every cached position is in the past)."""
+    q = _rand((B, H, 1, D), jnp.float32)
+    k = _rand((B, Hkv, Sk, D), jnp.float32)
+    v = _rand((B, Hkv, Sk, D), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    exp = ref.attention_reference(q, k, v, causal=False, window=0)
+    assert out.shape == (B, H, 1, D)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_decode_consistent_as_cache_grows():
+    """The decode step over a prefix cache must equal the same-position
+    row of a full-sequence causal pass (cache semantics)."""
+    B, H, S, D = 2, 4, 256, 64
+    q_full = _rand((B, H, S, D), jnp.float32)
+    k = _rand((B, H, S, D), jnp.float32)
+    v = _rand((B, H, S, D), jnp.float32)
+    full = ops.flash_attention(q_full, k, v, causal=True,
+                               block_q=64, block_k=64)
+    for pos in (64, 128, 192):
+        step = ops.flash_attention(q_full[:, :, pos - 1:pos, :],
+                                   k[:, :, :pos, :], v[:, :, :pos, :],
+                                   causal=False, block_q=64, block_k=64)
+        np.testing.assert_allclose(np.asarray(step[:, :, 0, :]),
+                                   np.asarray(full[:, :, pos - 1, :]),
+                                   atol=2e-5, rtol=2e-5)
+
+
 SSD_CASES = [
     (2, 4, 256, 32, 16, 64, jnp.float32),
     (1, 2, 128, 64, 128, 32, jnp.float32),

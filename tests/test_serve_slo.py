@@ -1,0 +1,221 @@
+"""SLO machinery: streaming percentile estimators vs np.percentile,
+tracker semantics, and the latency-objective policies' decisions."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.params import MalleabilityParams
+from repro.core.policy import POLICIES, ClusterView, get_policy
+from repro.serve import (P2Estimator, QueueDepthPolicy, SLOAwarePolicy,
+                         SLOTracker, WindowedPercentile)
+
+# -- P² estimator vs np.percentile -------------------------------------
+
+P2_STREAMS = [
+    ("uniform", lambda rng, n: rng.uniform(0.0, 10.0, n)),
+    ("exponential", lambda rng, n: rng.exponential(2.0, n)),
+    ("normal", lambda rng, n: rng.normal(5.0, 2.0, n)),
+    ("lognormal", lambda rng, n: rng.lognormal(0.0, 0.75, n)),
+    ("bimodal", lambda rng, n: np.where(rng.random(n) < 0.8,
+                                        rng.exponential(0.5, n),
+                                        5.0 + rng.exponential(2.0, n))),
+]
+
+
+@pytest.mark.parametrize("q", [0.5, 0.9, 0.95, 0.99])
+@pytest.mark.parametrize("name,gen", P2_STREAMS, ids=[s[0] for s in P2_STREAMS])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_p2_tracks_np_percentile(name, gen, q, seed):
+    rng = np.random.default_rng(seed)
+    xs = gen(rng, 4000)
+    est = P2Estimator(q)
+    for x in xs:
+        est.observe(float(x))
+    true = float(np.percentile(xs, q * 100.0))
+    spread = float(np.percentile(xs, 97.5) - np.percentile(xs, 2.5))
+    # P² is an approximation; heavy tails at extreme quantiles are its
+    # worst case, so the bound is a coarse fraction of the sample spread
+    assert abs(est.quantile() - true) <= 0.12 * spread + 1e-9, \
+        f"{name} q={q} seed={seed}: est {est.quantile()} vs true {true}"
+
+
+def test_p2_exact_when_few_samples():
+    est = P2Estimator(0.9)
+    assert math.isnan(est.quantile())
+    for x in [3.0, 1.0, 2.0]:
+        est.observe(x)
+    assert est.quantile() == pytest.approx(np.percentile([3.0, 1.0, 2.0], 90))
+
+
+def test_p2_monotone_markers_bound_estimate():
+    rng = np.random.default_rng(7)
+    xs = rng.exponential(1.0, 1000)
+    est = P2Estimator(0.99)
+    for x in xs:
+        est.observe(float(x))
+    assert xs.min() <= est.quantile() <= xs.max()
+
+
+def test_p2_rejects_degenerate_quantiles():
+    with pytest.raises(ValueError):
+        P2Estimator(0.0)
+    with pytest.raises(ValueError):
+        P2Estimator(1.0)
+
+
+# -- windowed percentile ------------------------------------------------
+
+@pytest.mark.parametrize("n,window", [(100, 32), (500, 128), (50, 128)])
+def test_windowed_percentile_exact_over_window(n, window):
+    rng = np.random.default_rng(3)
+    xs = rng.lognormal(0.0, 1.0, n)
+    w = WindowedPercentile(window)
+    for x in xs:
+        w.observe(float(x))
+    tail = xs[-min(n, window):]
+    for q in (0.5, 0.95, 0.99):
+        assert w.quantile(q) == pytest.approx(np.percentile(tail, q * 100))
+
+
+def test_windowed_percentile_forgets_old_regime():
+    w = WindowedPercentile(64)
+    for _ in range(64):
+        w.observe(100.0)              # old, slow regime
+    for _ in range(64):
+        w.observe(1.0)                # new, fast regime fills the window
+    assert w.quantile(0.99) == pytest.approx(1.0)
+
+
+# -- tracker ------------------------------------------------------------
+
+@pytest.mark.parametrize("estimator", ["window", "p2"])
+def test_slo_tracker_breach(estimator):
+    tr = SLOTracker(2.0, estimator=estimator)
+    assert not tr.breach()            # no data -> no breach
+    for _ in range(50):
+        tr.observe(1.0)
+    assert not tr.breach()
+    for _ in range(200):
+        tr.observe(5.0)
+    assert tr.breach()
+    assert tr.n == 250
+
+
+def test_slo_tracker_rejects_unknown_estimator():
+    with pytest.raises(ValueError):
+        SLOTracker(1.0, estimator="magic")
+
+
+# -- policies -----------------------------------------------------------
+
+class _Surface:
+    """Duck-typed serving surface (what ReplicaSet exposes as `job`)."""
+
+    def __init__(self, slo, queue_len=0, head_wait_s=0.0, utilization=0.5,
+                 quantum=2, in_flight=0, slots_per_replica=8):
+        self.slo = slo
+        self.queue_len = queue_len
+        self.head_wait_s = head_wait_s
+        self.utilization = utilization
+        self.resize_quantum = quantum
+        self.in_flight = in_flight
+        self.slots_per_replica = slots_per_replica
+
+
+def _params():
+    return MalleabilityParams(2, 16, 4)
+
+
+def _warm_tracker(latency, n=50, slo=4.0):
+    tr = SLOTracker(slo)
+    for _ in range(n):
+        tr.observe(latency)
+    return tr
+
+
+def test_slo_aware_registered():
+    assert isinstance(get_policy("slo-aware"), SLOAwarePolicy)
+    assert isinstance(get_policy("queue-depth"), QueueDepthPolicy)
+    assert POLICIES["slo-aware"] is SLOAwarePolicy
+
+
+def test_slo_aware_grows_on_breach():
+    pol = SLOAwarePolicy()
+    job = _Surface(_warm_tracker(6.0))          # p99 6s > 4s SLO
+    act = pol.decide(4, _params(), ClusterView(available=8,
+                                               pending_min_sizes=[]), job)
+    assert act.kind == "expand" and act.target == 6   # one quantum
+
+
+def test_slo_aware_grows_on_head_of_line_wait():
+    pol = SLOAwarePolicy()
+    job = _Surface(_warm_tracker(1.0), queue_len=3, head_wait_s=2.5)
+    act = pol.decide(4, _params(), ClusterView(available=8,
+                                               pending_min_sizes=[]), job)
+    assert act.kind == "expand"                 # wait >= 0.5 * SLO leads p99
+
+
+def test_slo_aware_cold_start_grows_on_queue():
+    pol = SLOAwarePolicy()
+    tr = SLOTracker(4.0)                        # zero observations
+    job = _Surface(tr, queue_len=5)
+    act = pol.decide(4, _params(), ClusterView(available=8,
+                                               pending_min_sizes=[]), job)
+    assert act.kind == "expand"
+
+
+def test_slo_aware_respects_pool_and_bounds():
+    pol = SLOAwarePolicy()
+    job = _Surface(_warm_tracker(6.0))
+    # no idle devices: cannot expand
+    act = pol.decide(4, _params(), ClusterView(available=0,
+                                               pending_min_sizes=[]), job)
+    assert act.kind == "none"
+    # at max_procs: cannot expand
+    act = pol.decide(16, _params(), ClusterView(available=8,
+                                                pending_min_sizes=[]), job)
+    assert act.kind == "none"
+
+
+def test_slo_aware_shrinks_only_after_patience():
+    pol = SLOAwarePolicy(shrink_patience=3)
+    job = _Surface(_warm_tracker(0.5), utilization=0.2)
+    view = ClusterView(available=0, pending_min_sizes=[])
+    acts = [pol.decide(8, _params(), view, job).kind for _ in range(4)]
+    assert acts[:2] == ["none", "none"]
+    assert "shrink" in acts[2:]
+    # a breach resets the patience counter
+    pol2 = SLOAwarePolicy(shrink_patience=2)
+    healthy = _Surface(_warm_tracker(0.5), utilization=0.2)
+    assert pol2.decide(8, _params(), view, healthy).kind == "none"
+    stressed = _Surface(_warm_tracker(6.0))
+    pol2.decide(8, _params(), view, stressed)            # resets calm
+    assert pol2.decide(8, _params(), view, healthy).kind == "none"
+
+
+def test_slo_aware_never_shrinks_below_min():
+    pol = SLOAwarePolicy(shrink_patience=1)
+    job = _Surface(_warm_tracker(0.5), utilization=0.0)
+    view = ClusterView(available=0, pending_min_sizes=[])
+    act = pol.decide(2, _params(), view, job)
+    assert act.kind == "none"
+
+
+def test_slo_aware_holds_without_serving_surface():
+    pol = SLOAwarePolicy()
+    act = pol.decide(4, _params(), ClusterView(available=8,
+                                               pending_min_sizes=[]), None)
+    assert act.kind == "none"
+
+
+def test_queue_depth_policy_decisions():
+    pol = QueueDepthPolicy(grow_depth=4.0, shrink_fill=0.6)
+    params = _params()
+    view = ClusterView(available=8, pending_min_sizes=[])
+    deep = _Surface(None, queue_len=20)          # 10 per replica at current=4
+    assert pol.decide(4, params, view, deep).kind == "expand"
+    idle = _Surface(None, queue_len=0, in_flight=2)
+    act = pol.decide(8, params, view, idle)      # 4 replicas, work fits in 3
+    assert act.kind == "shrink" and act.target == 6
+    assert pol.decide(2, params, view, idle).kind == "none"   # at min

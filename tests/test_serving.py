@@ -1,0 +1,245 @@
+"""repro.serve: request streams, the fleet engine, trail auditing, and
+the live-JAX replica path (subprocess)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.analysis.trail import (audit_trail, audit_trail_file, dump_trail,
+                                  job_metadata)
+from repro.rms.workload import SCENARIOS, UnknownScenarioError, make_scenario
+from repro.serve import (LeastLoadedBalancer, ReplicaSet, Request,
+                         RequestQueue, ServeConfig, make_request_stream)
+from tests.util import run_devices
+
+# -- request streams ----------------------------------------------------
+
+STREAM_SCENARIOS = ["steady", "bursty", "bimodal", "diurnal",
+                    "trace:synthetic"]
+
+
+@pytest.mark.parametrize("scenario", STREAM_SCENARIOS)
+def test_request_stream_shape(scenario):
+    reqs = make_request_stream(scenario, 300, horizon_s=60.0, seed=3)
+    assert len(reqs) == 300
+    arr = np.array([r.arrival_s for r in reqs])
+    assert (np.diff(arr) >= 0).all()                 # sorted
+    assert arr[0] >= 0.0 and arr[-1] < 60.0          # inside the horizon
+    assert [r.rid for r in reqs] == list(range(300))  # rids = arrival order
+    assert all(r.prompt_len >= 1 and r.decode_len >= 1 for r in reqs)
+    assert all(r.deadline_s == 8.0 for r in reqs)
+
+
+def test_request_stream_decode_cap():
+    reqs = make_request_stream("steady", 2000, horizon_s=100.0,
+                               mean_decode=48, max_decode_factor=3.0, seed=0)
+    assert max(r.decode_len for r in reqs) <= 3 * 48
+    # bimodal's long mode may exceed the cap (8x budget), but is bounded
+    reqs = make_request_stream("bimodal", 2000, horizon_s=100.0,
+                               mean_decode=48, max_decode_factor=3.0, seed=0)
+    assert max(r.decode_len for r in reqs) <= 8 * 3 * 48
+    assert max(r.decode_len for r in reqs) > 3 * 48   # the long mode exists
+
+
+def test_request_stream_unknown_scenario():
+    with pytest.raises(UnknownScenarioError) as ei:
+        make_request_stream("nope", 10)
+    msg = str(ei.value)
+    assert "diurnal" in msg and "trace:" in msg
+    assert isinstance(ei.value, KeyError)            # back-compat contract
+
+
+def test_diurnal_registered_in_scenario_library():
+    assert "diurnal" in SCENARIOS
+    jobs, pool = make_scenario("diurnal", 50, seed=0)
+    assert len(jobs) == 50
+    t = [j.submit_time for j in jobs]
+    assert t == sorted(t)
+
+
+def test_diurnal_arrivals_swell():
+    """Peak-hour arrival rate must exceed trough-hour rate."""
+    reqs = make_request_stream("diurnal", 4000, horizon_s=120.0, seed=1)
+    arr = np.array([r.arrival_s for r in reqs])
+    hist, _ = np.histogram(arr, bins=12, range=(0.0, 120.0))
+    assert hist.max() > 2.0 * hist.min()
+
+
+# -- queue + balancer ---------------------------------------------------
+
+def _req(rid, arrival, deadline=8.0):
+    return Request(rid=rid, arrival_s=arrival, prompt_len=16, decode_len=4,
+                   deadline_s=deadline)
+
+
+def test_request_queue_fifo_and_expiry():
+    q = RequestQueue()
+    assert q.pop() is None and q.head_wait_s(0.0) == 0.0
+    q.push(_req(0, 0.0))
+    q.push(_req(1, 1.0))
+    q.push(_req(2, 2.0, deadline=100.0))
+    assert q.head_wait_s(5.0) == 5.0
+    expired = q.expire(9.0)               # rid0 waited 9 >= 8, rid1 8 >= 8
+    assert [r.rid for r in expired] == [0, 1]
+    assert len(q) == 1 and q.pop().rid == 2
+
+
+class _FakeReplica:
+    def __init__(self, rid, free):
+        self.rid = rid
+        self.free_slots = free
+
+
+def test_least_loaded_balancer():
+    lb = LeastLoadedBalancer()
+    assert lb.pick([]) is None
+    reps = [_FakeReplica(0, 2), _FakeReplica(1, 5), _FakeReplica(2, 5)]
+    assert lb.pick(reps).rid == 1          # most free, lowest rid on tie
+    assert lb.pick([_FakeReplica(0, 0)]) is None   # full fleet: no pick
+
+
+# -- fleet engine: static -----------------------------------------------
+
+def test_static_fleet_completes_everything():
+    reqs = make_request_stream("steady", 120, horizon_s=20.0, seed=0)
+    rs = ReplicaSet(reqs, devices=16, static_replicas=4)
+    res = rs.run()
+    s = res.summary()
+    assert s["n_dropped"] == 0 and s["n_completed"] == 120
+    assert s["slo_attainment"] > 0.9
+    assert res.n_scale_ups == 0 and res.n_scale_downs == 0
+    # 4 replicas x 2 devices held for the whole run, exactly
+    assert res.mean_devices == pytest.approx(8.0)
+    assert res.peak_devices == 8
+    assert rs.decisions == "static"
+    # every request finished after it started, after it arrived
+    for r in res.requests:
+        assert r.start_s >= r.arrival_s and r.finish_s > r.start_s
+
+
+def test_overload_drops_honor_deadlines():
+    # one tiny replica vs a flood: the queue must shed by deadline
+    reqs = make_request_stream("steady", 400, horizon_s=4.0,
+                               deadline_s=2.0, seed=0)
+    cfg = ServeConfig(devices_per_replica=1, slots_per_device=2,
+                      max_replicas=1)
+    rs = ReplicaSet(reqs, devices=1, static_replicas=1, config=cfg)
+    res = rs.run()
+    s = res.summary()
+    assert s["n_dropped"] > 0
+    for r in res.requests:
+        if r.dropped:
+            assert r.start_s < 0           # dropped = never admitted
+    # drop events carry (rid, wait, deadline) with wait >= deadline
+    drops = [ev for ev in res.trail if ev[0] == "request-drop"]
+    assert len(drops) == s["n_dropped"]
+    for _, _, (rid, wait, deadline), _ in drops:
+        assert wait >= deadline - 1e-9
+
+
+def test_zero_deadline_never_drops():
+    reqs = make_request_stream("steady", 200, horizon_s=2.0,
+                               deadline_s=0.0, seed=0)
+    cfg = ServeConfig(devices_per_replica=1, slots_per_device=2,
+                      max_replicas=1)
+    res = ReplicaSet(reqs, devices=1, static_replicas=1, config=cfg).run()
+    assert res.summary()["n_dropped"] == 0
+    assert res.summary()["n_completed"] == 200
+
+
+# -- fleet engine: elastic ----------------------------------------------
+
+def _diurnal_run(policy="slo-aware", **kw):
+    reqs = make_request_stream("diurnal", 1500, horizon_s=60.0, seed=2)
+    rs = ReplicaSet(reqs, devices=16, policy=policy, **kw)
+    return rs, rs.run()
+
+
+def test_elastic_scales_with_the_day_cycle():
+    rs, res = _diurnal_run()
+    s = res.summary()
+    assert res.n_scale_ups > 0                 # grew into the peak
+    assert res.n_scale_downs > 0               # gave devices back
+    assert res.peak_devices > rs.params.preferred
+    assert s["slo_attainment"] > 0.9
+    # the timeline saw more than one fleet size
+    assert len({devs for _, _, devs in res.timeline}) > 1
+
+
+def test_elastic_trail_audits_clean(tmp_path):
+    rs, res = _diurnal_run()
+    violations = audit_trail(res.trail, rs._pool_ids,
+                             jobs=job_metadata(rs), check_spacing=False)
+    assert violations == []
+    # dump -> file audit roundtrip (what the CI analysis job runs)
+    path = os.path.join(tmp_path, "serving_trail.json")
+    dump_trail(rs, path)
+    assert audit_trail_file(path) == []
+
+
+def test_elastic_sanitize_mode_runs_clean():
+    _, res = _diurnal_run(sanitize=True)       # raises TrailViolation if bad
+    assert res.summary()["n_completed"] > 0
+
+
+def test_queue_depth_policy_drives_the_fleet():
+    rs, res = _diurnal_run(policy="queue-depth")
+    assert res.n_scale_ups > 0
+    assert res.summary()["n_completed"] == 1500 - res.summary()["n_dropped"]
+
+
+def test_throughput_greedy_hoards_the_pool():
+    rs, res = _diurnal_run(policy="throughput-greedy")
+    assert res.peak_devices == 16              # grabs everything
+    assert res.n_scale_downs == 0              # never gives back
+
+
+def test_pool_must_fit_max_replicas():
+    reqs = make_request_stream("steady", 10, horizon_s=1.0)
+    with pytest.raises(ValueError):
+        ReplicaSet(reqs, devices=4)            # 8 x 2 devices > 4
+    with pytest.raises(ValueError):
+        ReplicaSet(reqs, devices=4, static_replicas=3)
+
+
+# -- live-JAX mode (subprocess, host device farm) -----------------------
+
+LIVE_SCRIPT = r"""
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np
+from repro.configs import get_config
+from repro.serve import (ReplicaSet, ServeConfig, decode_demo,
+                         make_decode_app, make_request_stream)
+
+# 1) per-replica malleability: resize mid-decode, tokens bit-identical
+base = decode_demo("mamba2-370m-smoke", batch=4, prompt_len=8,
+                   decode_steps=8, cache_len=64)
+ela = decode_demo("mamba2-370m-smoke", batch=4, prompt_len=8,
+                  decode_steps=8, cache_len=64,
+                  schedule={10: 8, 13: 2})
+assert np.array_equal(base["tokens"], ela["tokens"]), \
+    (base["tokens"], ela["tokens"])
+assert len(ela["events"]) == 2
+assert [e.action for e in ela["events"]] == ["expand", "shrink"]
+assert all(e.transfer.bytes_moved > 0 for e in ela["events"])
+
+# 2) fleet engine in live mode: each replica steps a real runner
+import jax
+cfg = get_config("mamba2-370m-smoke")
+factory = lambda: make_decode_app(cfg, batch=2, cache_len=32)
+reqs = make_request_stream("steady", 12, horizon_s=1.0, mean_decode=4,
+                           max_decode_factor=1.0, seed=0)
+sc = ServeConfig(devices_per_replica=2, max_replicas=2, min_replicas=1,
+                 initial_replicas=1, slots_per_device=4)
+rs = ReplicaSet(reqs, devices=jax.devices()[:4], config=sc,
+                static_replicas=2, app_factory=factory)
+res = rs.run()
+assert res.summary()["n_completed"] == 12
+assert all(r.runner is None for r in rs._replicas)  # all torn down
+print("SERVE_LIVE_OK")
+"""
+
+
+def test_live_replica_resize_and_fleet():
+    out = run_devices(LIVE_SCRIPT, n_devices=8)
+    assert "SERVE_LIVE_OK" in out
