@@ -9,11 +9,12 @@ import sys
 import traceback
 
 from benchmarks import (allocation_rate, energy, fault_tolerance,
-                        kernels_bench, live_cluster, partial_malleability,
-                        per_job_times, redistribution_overhead,
-                        scaling_study, scenario_suite, serving,
-                        submission_modes, tpu_lm_workload, trace_replay,
-                        usability_sloc, workload_evolution, workload_speedup)
+                        kernels_bench, live_cluster, mixed_pool,
+                        partial_malleability, per_job_times,
+                        redistribution_overhead, scaling_study,
+                        scenario_suite, serving, submission_modes,
+                        tpu_lm_workload, trace_replay, usability_sloc,
+                        workload_evolution, workload_speedup)
 
 BENCHES = [
     ("fig3", scaling_study),
@@ -33,6 +34,7 @@ BENCHES = [
     ("trace_replay", trace_replay),
     ("live_cluster", live_cluster),
     ("serving", serving),
+    ("mixed_pool", mixed_pool),
 ]
 
 

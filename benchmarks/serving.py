@@ -168,6 +168,16 @@ def run(smoke: bool = False, seed: int = SEED, trail_path=None) -> dict:
         "smoke": smoke,
     }
     path = write_csv("serving", rows)
+    # benchmarks.mixed_pool merges its results into this artifact under
+    # "mixed_pool" — preserve that section across serving reruns
+    if os.path.exists(BENCH_JSON):
+        try:
+            with open(BENCH_JSON) as f:
+                prior = json.load(f)
+            if "mixed_pool" in prior:
+                payload["mixed_pool"] = prior["mixed_pool"]
+        except (json.JSONDecodeError, OSError):
+            pass
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1)
     report("serving", time.perf_counter() - t_start,

@@ -32,6 +32,14 @@ DMR105  **resize-in-inhibitor-window** — a scripted RMS schedule whose
         ``sched_iterations`` inhibitor window: the later decision
         cannot fire at its requested step (it is deferred to the next
         query the §3.2 guard lets through).
+DMR106  **device-list-mutation-outside-contract** — code that mutates a
+        ``.devices`` list (``append``/``extend``/slice-assign/rebind/
+        ``del``) outside the :class:`repro.dmr.MalleableTenant` contract
+        methods (``grant_devices``/``release_devices``/``shutdown``) or
+        a constructor.  Devices that enter or leave a tenant without
+        going through the contract are invisible to the cluster's pool
+        accounting and to the trail auditor — the exact double-grant /
+        leaked-device class the contract exists to prevent.
 ======= ===============================================================
 
 Suppress a finding with ``# dmr: ignore[DMR1xx]`` on the offending line.
@@ -436,6 +444,65 @@ def check_resize_in_inhibitor_window(tree: ast.Module, path: str,
 
 
 # ----------------------------------------------------------------------
+# DMR106 — device-list mutation outside the tenant contract
+# ----------------------------------------------------------------------
+
+_DEVICE_MUTATORS = {"append", "extend", "insert", "remove", "pop", "clear",
+                    "sort", "reverse"}
+# methods where .devices mutation IS the contract (or first construction)
+_CONTRACT_METHODS = {"grant_devices", "release_devices", "shutdown",
+                     "handle_failure", "__init__"}
+
+
+def _is_devices_attr(node: ast.AST) -> bool:
+    return isinstance(node, ast.Attribute) and node.attr == "devices"
+
+
+def check_device_list_mutation(tree: ast.Module, path: str,
+                               source: str) -> List[LintFinding]:
+    findings = []
+
+    def flag(node: ast.AST, what: str) -> None:
+        findings.append(LintFinding(
+            path, node.lineno, "DMR106",
+            f"{what} mutates a .devices list outside the MalleableTenant "
+            f"contract — route it through grant_devices()/"
+            f"release_devices()/shutdown() so the pool accounting and "
+            f"trail auditor see the transfer"))
+
+    def visit(node: ast.AST, fn: Optional[str]) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn = node.name
+        exempt = fn in _CONTRACT_METHODS
+        if not exempt:
+            if isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _DEVICE_MUTATORS and \
+                    _is_devices_attr(node.func.value):
+                flag(node, f"'.devices.{node.func.attr}(...)'")
+            elif isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    base = t.value if isinstance(t, ast.Subscript) else t
+                    if _is_devices_attr(base):
+                        what = "subscript assignment to '.devices'" \
+                            if isinstance(t, ast.Subscript) \
+                            else "rebinding '.devices'"
+                        flag(node, what)
+            elif isinstance(node, ast.Delete):
+                for t in node.targets:
+                    base = t.value if isinstance(t, ast.Subscript) else t
+                    if _is_devices_attr(base):
+                        flag(node, "'del' on '.devices'")
+        for child in ast.iter_child_nodes(node):
+            visit(child, fn)
+
+    visit(tree, None)
+    return findings
+
+
+# ----------------------------------------------------------------------
 # driver
 # ----------------------------------------------------------------------
 
@@ -445,6 +512,7 @@ RULES = [
     ("DMR103", check_unmatched_pattern_path),
     ("DMR104", check_deprecated_core_import),
     ("DMR105", check_resize_in_inhibitor_window),
+    ("DMR106", check_device_list_mutation),
 ]
 
 

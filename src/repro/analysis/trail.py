@@ -20,11 +20,24 @@ identical trails — the differential harness asserts it)::
 
 ``repro.serve``'s :class:`~repro.serve.replica.ReplicaSet` records the
 same stream with replica-lifecycle kinds — a replica is a job whose
-grant/release happens atomically with its up/down::
+grant/release happens atomically with its up/down — plus the in-place
+mesh-resize event::
 
     ("replica-up",   rid, (device ids...),                tick)
     ("replica-down", rid, (device ids...),                tick)
     ("request-drop", rid, (request id, wait_s, deadline_s), tick)
+    ("replica-resize", rid, (step, kind, from_devs, to_devs,
+                             active_seqs, slots_per_device), tick)
+
+**Delegation namespacing** — when a whole fleet runs as one composite
+tenant inside a ``dmr.Cluster`` (``repro.serve.tenant``), its internal
+events land in the *cluster's* trail with replica ids namespaced as
+``(parent_jid + 1) * SUB_JID_BASE + rid``.  The auditor recognizes the
+namespace (:func:`parent_of`) and tracks those grants in a *delegation
+ledger*: a delegated device must be owner-held by the parent tenant and
+not already delegated, top-level ownership is untouched (conservation
+still balances), and a parent releasing a still-delegated device to the
+cluster pool is flagged.
 
 :class:`TrailAuditor` consumes a trail one event at a time and checks
 the happens-before / interval contract:
@@ -64,6 +77,17 @@ start`` / ``double-finish`` / ``final-procs-mismatch``
                      replica) for a replica that is not up
 ``premature-drop``   a request dropped before its deadline elapsed —
                      goodput thrown away that the queue still owed
+``replica-resize-not-up`` an in-place mesh resize on a replica that is
+                     not live (never up, or already torn down)
+``grow-exceeds-grant`` an in-place grow to more devices than the
+                     replica actually holds — the fleet resized a mesh
+                     past its (delegated) grant
+``shrink-below-active`` an in-place shrink whose surviving slot count
+                     (``to_devs x slots_per_device``) is smaller than
+                     the replica's active batch — admitted sequences
+                     would be evicted mid-decode
+``delegation-outside-grant`` a composite fleet delegated a device its
+                     parent tenant does not hold
 ==================== ==================================================
 
 Offline use (trace scale — the checker is O(events), never O(pool x
@@ -93,7 +117,19 @@ __all__ = [
     "Violation", "TrailViolation", "JobMeta", "TrailAuditor",
     "audit_trail", "audit_grant_log", "audit_resize_log",
     "job_metadata", "dump_trail", "load_trail", "audit_trail_file",
+    "SUB_JID_BASE", "parent_of",
 ]
+
+#: Namespace stride for composite-tenant child events: replica ``rid``
+#: of parent tenant ``jid`` appears in the cluster trail as
+#: ``(jid + 1) * SUB_JID_BASE + rid``.
+SUB_JID_BASE = 1_000_000
+
+
+def parent_of(jid: int) -> Optional[int]:
+    """Parent tenant of a namespaced child jid, or ``None`` for a
+    top-level jid."""
+    return jid // SUB_JID_BASE - 1 if jid >= SUB_JID_BASE else None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +188,9 @@ class TrailAuditor:
         self.live = live
         self.owner: Dict[int, int] = {}           # device id -> holder jid
         self.held: Dict[int, set] = {}            # jid -> device id set
+        #: delegation ledger: device id -> namespaced child jid holding
+        #: it *within* its parent tenant's grant (composite fleets)
+        self.sub_owner: Dict[int, int] = {}
         self.current: Dict[int, int] = {}         # jid -> tracked size
         self.started: set = set()
         self.finished: set = set()
@@ -190,6 +229,8 @@ class TrailAuditor:
             self.on_replica_down(jid, payload, tick)
         elif kind == "request-drop":
             self.on_request_drop(jid, payload, tick)
+        elif kind == "replica-resize":
+            self.on_replica_resize(jid, *payload, tick=tick)
         else:
             self._flag("unknown-event", jid, tick,
                        f"unrecognized trail event kind {kind!r}")
@@ -214,6 +255,10 @@ class TrailAuditor:
         self.last_resize_step.pop(jid, None)
 
     def on_grant(self, jid: int, ids: Sequence[int], tick) -> None:
+        parent = parent_of(jid)
+        if parent is not None:
+            self._delegated_grant(jid, parent, ids, tick)
+            return
         mine = self.held.setdefault(jid, set())
         seen = set()
         for d in ids:
@@ -235,6 +280,9 @@ class TrailAuditor:
             mine.add(d)
 
     def on_release(self, jid: int, ids: Sequence[int], tick) -> None:
+        if parent_of(jid) is not None:
+            self._delegated_release(jid, ids, tick)
+            return
         mine = self.held.get(jid, set())
         for d in ids:
             if self.owner.get(d) != jid:
@@ -244,7 +292,62 @@ class TrailAuditor:
                 self._flag("bad-release", jid, tick,
                            f"released device {d} it does not hold ({what})")
                 continue
+            sub = self.sub_owner.get(d)
+            if sub is not None:
+                self._flag("bad-release", jid, tick,
+                           f"released device {d} while replica {sub} "
+                           f"still runs on it (delegation not withdrawn)")
+                continue
             del self.owner[d]
+            mine.discard(d)
+
+    # -- the delegation ledger (composite fleets inside a cluster) ------
+    def _delegated_grant(self, jid: int, parent: int,
+                         ids: Sequence[int], tick) -> None:
+        """A namespaced grant hands a slice of the *parent tenant's*
+        grant to one of its replicas: top-level ownership is untouched,
+        the delegation ledger tracks the inner assignment."""
+        mine = self.held.setdefault(jid, set())
+        seen = set()
+        for d in ids:
+            if d in seen:
+                self._flag("double-grant", jid, tick,
+                           f"device {d} appears twice in one grant")
+                continue
+            seen.add(d)
+            if d not in self.pool:
+                self._flag("unknown-device", jid, tick,
+                           f"granted device {d} is not in the cluster pool")
+                continue
+            if self.owner.get(d) != parent:
+                holder = self.owner.get(d)
+                what = (f"held by jid {holder}" if holder is not None
+                        else "idle")
+                self._flag("delegation-outside-grant", jid, tick,
+                           f"fleet {parent} delegated device {d} it does "
+                           f"not hold ({what})")
+                continue
+            sub = self.sub_owner.get(d)
+            if sub is not None:
+                self._flag("double-grant", jid, tick,
+                           f"device {d} already delegated to replica "
+                           f"{sub}")
+                continue
+            self.sub_owner[d] = jid
+            mine.add(d)
+
+    def _delegated_release(self, jid: int, ids: Sequence[int],
+                           tick) -> None:
+        mine = self.held.get(jid, set())
+        for d in ids:
+            if self.sub_owner.get(d) != jid:
+                sub = self.sub_owner.get(d)
+                what = (f"delegated to replica {sub}" if sub is not None
+                        else "not delegated to anyone")
+                self._flag("bad-release", jid, tick,
+                           f"released device {d} it does not hold ({what})")
+                continue
+            del self.sub_owner[d]
             mine.discard(d)
 
     def on_resize(self, jid: int, step: int, kind: str,
@@ -339,6 +442,38 @@ class TrailAuditor:
                        f"{sorted(leftover)}")
         self.finished.add(rid)
 
+    def on_replica_resize(self, rid: int, step: int, kind: str,
+                          from_devs: int, to_devs: int, active_seqs: int,
+                          slots_per_device: int, *, tick) -> None:
+        """An in-place mesh resize of a live serving replica —
+        ``repro.serve``'s ``dmr.reconfig`` path.  Grants precede grows
+        and releases follow shrinks, so the held set brackets
+        ``to_devs`` on both sides of the event."""
+        if rid not in self.started or rid in self.finished:
+            self._flag("replica-resize-not-up", rid, tick,
+                       f"{kind} {from_devs}->{to_devs} on a replica that "
+                       f"is not live")
+        meta = self._meta(rid)
+        if not meta.min_procs <= to_devs <= meta.max_procs:
+            self._flag("resize-out-of-range", rid, tick,
+                       f"target {to_devs} outside "
+                       f"[{meta.min_procs}, {meta.max_procs}]")
+        tracked = self.current.get(rid)
+        if tracked is not None and from_devs != tracked:
+            self._flag("chain-continuity", rid, tick,
+                       f"resize claims from_devs={from_devs} but the "
+                       f"replica's tracked size is {tracked}")
+        if rid in self.held and to_devs > len(self.held[rid]):
+            self._flag("grow-exceeds-grant", rid, tick,
+                       f"in-place grow to {to_devs} devices but the "
+                       f"replica holds only {len(self.held[rid])}")
+        if kind == "shrink" and active_seqs > to_devs * slots_per_device:
+            self._flag("shrink-below-active", rid, tick,
+                       f"shrink to {to_devs} devices leaves "
+                       f"{to_devs * slots_per_device} slots for "
+                       f"{active_seqs} active sequences")
+        self.current[rid] = to_devs
+
     def on_request_drop(self, rid: int, payload: Sequence, tick) -> None:
         """``payload = (request id, wait_s, deadline_s)``; ``rid`` is the
         holding replica, or -1 for a drop out of the waiting queue."""
@@ -373,6 +508,14 @@ class TrailAuditor:
                     self._flag("leaked-devices", jid, -1,
                                f"trail ended with devices {sorted(ds)} "
                                f"never released")
+            if self.sub_owner:
+                by_sub: Dict[int, List[int]] = {}
+                for d, jid in self.sub_owner.items():
+                    by_sub.setdefault(jid, []).append(d)
+                for jid, ds in sorted(by_sub.items()):
+                    self._flag("leaked-devices", jid, -1,
+                               f"trail ended with devices {sorted(ds)} "
+                               f"still delegated")
             for jid in sorted(self.started - self.finished):
                 self._flag("unfinished-job", jid, -1,
                            "trail ended before the job finished")

@@ -66,10 +66,15 @@ def reclaimable_workers(tenants, exclude=None) -> int:
     as both the simulator engines and the live ``dmr.Cluster`` define it.
 
     ``tenants`` yields duck-typed running jobs exposing ``nprocs``,
-    ``malleable`` and malleability params at ``.app.params``."""
+    ``malleable`` and malleability params at ``.app.params``.  Tenants
+    flagged ``reclaim_opaque`` (composite serving fleets, whose internal
+    occupancy the cluster cannot see and whose shrinks may land partial)
+    are excluded — their excess must never enter another job's line-6
+    shrink arithmetic."""
     return sum(max(0, t.nprocs - t.app.params.preferred)
                for t in tenants
-               if t is not exclude and getattr(t, "malleable", False))
+               if t is not exclude and getattr(t, "malleable", False)
+               and not getattr(t, "reclaim_opaque", False))
 
 
 def live_view(*, available: int, pending_min_sizes: Sequence[int],
@@ -197,6 +202,15 @@ class BasePolicy:
     def decide(self, current: int, params: MalleabilityParams,
                cluster: ClusterView, job=None) -> Action:
         raise NotImplementedError
+
+    def choose_scale_path(self, job) -> str:
+        """How a serving fleet should realize an expand this policy just
+        decided: ``"in-place"`` grows a live replica's mesh through
+        ``dmr.reconfig`` (warm — ready after ``grow_ticks``),
+        ``"replica"`` cold-starts a new replica (``cold_start_ticks`` of
+        no service).  Batch policies default to whole replicas; the
+        latency policies in ``repro.serve.slo`` override this."""
+        return "replica"
 
     def __repr__(self):
         return f"{type(self).__name__}(name={self.name!r})"

@@ -33,6 +33,7 @@ from repro.dmr.patterns import (PATTERNS, BlockCyclicPattern, CallablePattern,
                                 ResizeContext, get_pattern, redistribute_tree,
                                 register_pattern)
 from repro.dmr.runner import MalleableRunner, ResizeEvent, reconfig
+from repro.dmr.tenant import MalleableTenant
 
 
 def set_parameters(min_procs: int, max_procs: int, preferred: int, *,
@@ -61,4 +62,5 @@ __all__ = [
     # shared types
     "MalleableApp", "ensure_app", "MalleabilityParams", "Action",
     "ClusterView", "Policy", "get_policy", "TransferStats", "ResizeEvent",
+    "MalleableTenant",
 ]

@@ -167,6 +167,28 @@ def _null_redistribute(state, new_shardings):
     return state, _NULL_STATS
 
 
+class _WithDemand:
+    """``pending_min_sizes`` plus published composite-tenant shortfalls,
+    without materializing the (possibly duplicate-collapsed) base
+    summary into a list.  Policies only need truthiness, iteration and
+    ``len`` from the view — exactly what this forwards."""
+    __slots__ = ("base", "extra")
+
+    def __init__(self, base, extra):
+        self.base = base
+        self.extra = extra
+
+    def __bool__(self):
+        return bool(self.base) or bool(self.extra)
+
+    def __len__(self):
+        return len(self.base) + len(self.extra)
+
+    def __iter__(self):
+        yield from self.base
+        yield from self.extra
+
+
 class ClusterRMS:
     """The :class:`RMSConnector` a ``dmr.Cluster`` hands each tenant: a
     query evaluates the cluster's shared policy against the *live*
@@ -235,6 +257,114 @@ class _Tenant:
         if self.moldable:
             return (p.min_procs, p.max_procs)
         return (p.max_procs, p.max_procs)
+
+    def quantize(self, n: int) -> int:
+        """Round a prospective start size onto the tenant's allocation
+        quantum (identity for ordinary jobs; composite serving tenants
+        round down to whole replicas)."""
+        return n
+
+    # -- the MalleableTenant contract (repro.dmr.tenant) ----------------
+    # The cluster moves devices through the *tenant*, not the runner:
+    # an ordinary job delegates straight to its MalleableRunner, while a
+    # composite tenant (a serving fleet) routes the same four members
+    # through its adapter — one contract from ReplicaSet down to a mesh.
+    @property
+    def current_size(self) -> int:
+        return self.runner.current if self.runner is not None else 0
+
+    def grant_devices(self, new_devices: List) -> None:
+        self.runner.grant_devices(new_devices)
+
+    def release_devices(self) -> List:
+        return self.runner.release_devices()
+
+    def shutdown(self) -> List:
+        return self.runner.shutdown()
+
+    def make_runner(self, cluster: "_ClusterBase", grant: List, p: int,
+                    listener: Optional[Callable]) -> MalleableRunner:
+        """Build this tenant's runner on its start grant — the hook a
+        composite tenant overrides to wire a fleet adapter instead."""
+        return MalleableRunner(self.exec_app, self.params, self.rms,
+                               devices=grant, initial_procs=p,
+                               max_model_axis=cluster.max_model_axis,
+                               allow_partial=True,
+                               mesh_factory=cluster.mesh_factory,
+                               redistribute=cluster.redistribute,
+                               event_listener=listener)
+
+
+class _CompositeTenant(_Tenant):
+    """A whole serving fleet as ONE tenant of the cluster.
+
+    Built from any spec object exposing the composite-tenant surface
+    (``repro.serve.tenant.ServeTenantSpec``): ``jid`` / ``submit_step``,
+    ``device_params()`` (the fleet's device budget as
+    ``MalleabilityParams``), ``profile()`` (an ``AppProfile`` for the
+    records/priority surface), ``quantum`` (devices per replica) and
+    ``build_runner(...)`` (the ``ReplicaSetRunner`` adapter satisfying
+    the runner's pool/step surface).  Three flags shape how the cluster
+    treats it:
+
+    * ``reclaim_opaque`` — its internal occupancy is invisible and its
+      shrinks may land partial, so its excess never enters co-tenants'
+      line-6 shrink arithmetic (``reclaimable_workers``).
+    * ``publishes_demand`` — a blocked expand publishes its device
+      shortfall into co-tenants' ``pending_min_sizes`` view, which is
+      what makes training jobs shrink at the serving peak.
+    * ``local_policy`` — its resize queries are answered by its own
+      serving policy (SLO-aware et al.) over the fleet's latency
+      surface, not the cluster-wide batch policy.
+    """
+
+    composite = True
+    reclaim_opaque = True
+    publishes_demand = True
+
+    def __init__(self, spec):
+        self.spec = spec
+        self.jid = spec.jid
+        self.params = spec.device_params()
+        self.app = spec.profile()
+        self.exec_app = None
+        self.moldable = True
+        self.malleable = True
+        self.submit_step = spec.submit_step
+        self.submit_s = getattr(spec, "submit_s", 0.0)
+        self.steps = 1 << 30             # open-ended: finishes when drained
+        self.runner = None
+        self.rms = None
+        self.state = None
+        self.step = 0
+        self.boosted = False
+        self.start_tick = -1
+        self.end_tick = -1
+        self.start_procs = 0
+        self.final_procs = 0
+        self.events: List[ResizeEvent] = []
+        self.local_policy = None
+        #: the fleet's ServingResult, captured at shutdown (the adapter
+        #: writes it here because the runner itself is dropped on finish)
+        self.result = None
+
+    def request(self) -> Tuple[int, int]:
+        p = self.params
+        return (p.min_procs, p.preferred)   # start at the planned fleet
+
+    def quantize(self, n: int) -> int:
+        q = self.spec.quantum
+        return max(self.params.min_procs, (n // q) * q)
+
+    def make_runner(self, cluster: "_ClusterBase", grant: List, p: int,
+                    listener: Optional[Callable]):
+        sink = None
+        if cluster.trail is not None:
+            sink = (lambda kind, jid, payload:
+                    cluster._trail_event(kind, jid, payload))
+        runner, self.local_policy = self.spec.build_runner(
+            self, grant, p, listener=listener, trail_sink=sink)
+        return runner
 
 
 @dataclasses.dataclass
@@ -398,6 +528,12 @@ class _ClusterBase:
         if len(set(self._pool_ids)) != len(self._pool_ids):
             raise ValueError("duplicate device ids in the pool")
         self.simwl: Optional[SimWorkload] = None
+        if decisions == "cosim" and any(getattr(t, "composite", False)
+                                        for t in self.tenants):
+            raise ValueError(
+                "decisions='cosim' cannot replay a composite serving "
+                "tenant: the discrete-event simulator has no model of a "
+                "fleet's internal request dynamics")
         if decisions == "cosim":
             self.simwl = SimWorkload(
                 self._sim_jobs(),
@@ -423,6 +559,10 @@ class _ClusterBase:
     def _as_tenant(self, entry, i: int) -> _Tenant:
         if isinstance(entry, LiveJobSpec):
             return _Tenant(entry, ensure_app(self.app_factory(entry)))
+        if hasattr(entry, "build_runner"):
+            # a composite serving-fleet spec (repro.serve.tenant.
+            # ServeTenantSpec) — duck-typed so dmr never imports serve
+            return _CompositeTenant(entry)
         if isinstance(entry, tuple) and 3 <= len(entry) <= 5:
             # (app, params, submit_step[, mode[, malleable]]) — flexible
             # (moldable + malleable) unless the optional flags say not
@@ -511,8 +651,9 @@ class _ClusterBase:
             self._sanitizer.feed(event)          # raises TrailViolation
 
     def _grant(self, t: _Tenant, need: int) -> None:
+        # through the MalleableTenant contract, never the raw device list
         grant = self._take(need)
-        t.runner.grant_devices(grant)
+        t.grant_devices(grant)
         if self.trail is not None:
             self._trail_event("grant", t.jid, tuple(d.id for d in grant))
 
@@ -529,6 +670,11 @@ class _ClusterBase:
         listener = None
         if self.trail is not None:
             self._trail_event("start", t.jid, p)
+            # the grant event must precede runner construction: a
+            # composite tenant's init() delegates pieces of this grant
+            # to its replicas through the trail sink, and the auditor
+            # only accepts delegations of devices the parent holds
+            self._trail_event("grant", t.jid, tuple(d.id for d in grant))
             # feed the trail from the runner's own event log: the
             # listener sees the resize that *actually* applied (after
             # pool clamping / cosim boundary drains), not the decision
@@ -536,13 +682,7 @@ class _ClusterBase:
             listener = (lambda e, jid=t.jid: self._trail_event(
                 "resize", jid, (e.step, e.action, e.from_procs,
                                 e.to_procs)))
-        t.runner = MalleableRunner(t.exec_app, t.params, t.rms,
-                                   devices=grant, initial_procs=p,
-                                   max_model_axis=self.max_model_axis,
-                                   allow_partial=True,
-                                   mesh_factory=self.mesh_factory,
-                                   redistribute=self.redistribute,
-                                   event_listener=listener)
+        t.runner = t.make_runner(self, grant, p, listener)
         if self.prewarm:
             t.runner.prewarm()
         t.state = t.runner.init()
@@ -551,8 +691,6 @@ class _ClusterBase:
         self._dequeue(t)
         self._running_add(t)
         self._note_start(t, tick)
-        if self.trail is not None:
-            self._trail_event("grant", t.jid, tuple(d.id for d in grant))
 
     # -- the per-query decision (ClusterRMS calls back here) ------------
     def _decide(self, t: _Tenant, step: int, current: int,
@@ -569,19 +707,34 @@ class _ClusterBase:
             self.simwl.consume(t.jid)
             self._note_resize(t, current, act.target)
             return act
-        act = self.policy.decide(current, params, self._live_view(t), job=t)
+        # a composite tenant's queries are answered by its OWN serving
+        # policy over the fleet's latency surface (the adapter's .fleet);
+        # ordinary tenants keep the cluster-wide policy and pass
+        # themselves as the job handle
+        pol = getattr(t, "local_policy", None) or self.policy
+        act = pol.decide(current, params, self._live_view(t),
+                         job=getattr(t.runner, "fleet", t))
         if act.kind == "none":
+            self._demand.pop(t.jid, None)
             return Action.none(current)
         target = params.clamp(act.target)
         if target == current:
+            self._demand.pop(t.jid, None)
             return Action.none(current)
         if target > current:
             need = target - current
             if need > len(self._idle):
-                return Action.none(current)         # view raced; be safe
+                # view raced (or a serving burst outran the pool): a
+                # demand-publishing tenant posts its shortfall so
+                # co-tenants' line-6 shrinks can serve it next window
+                if getattr(t, "publishes_demand", False):
+                    self._demand[t.jid] = need
+                return Action.none(current)
+            self._demand.pop(t.jid, None)
             self._grant(t, need)
             self._note_resize(t, current, target)
             return Action("expand", target)
+        self._demand.pop(t.jid, None)
         self._note_resize(t, current, target)
         return Action("shrink", target)
 
@@ -603,19 +756,20 @@ class _ClusterBase:
                 if act.kind != "none":
                     t.state = r.apply_resize(t.state, t.steps - 1, act)
             if r.current < len(r.devices):          # shrink: reclaim the tail
-                self._reclaim(t, r.release_devices())
+                self._reclaim(t, t.release_devices())
                 self._boost_pending()
         if t.step < t.steps:
             t.state, _ = r.step(t.state, t.step)
             t.step += 1
-        if t.step >= t.steps and not (simwl is not None
-                                      and simwl.unconsumed(t.jid)):
+        if (t.step >= t.steps or getattr(r, "complete", False)) \
+                and not (simwl is not None and simwl.unconsumed(t.jid)):
             t.end_tick = tick + 1
             t.final_procs = r.current
             t.events = r.events
-            self._reclaim(t, r.shutdown())
+            self._reclaim(t, t.shutdown())
             if self.trail is not None:
                 self._trail_event("finish", t.jid, t.final_procs)
+            self._demand.pop(t.jid, None)
             self._note_finish(t)
             # drop the runner/state so a million completed tenants don't
             # pin device lists and app state; records read the captured
@@ -642,6 +796,9 @@ class _ClusterBase:
         if self.simwl is not None:
             self.simwl.reset()
         self._idle: List = list(self.devices)
+        #: jid -> published device shortfall of a blocked composite
+        #: expand; co-tenants see these in their pending_min_sizes view
+        self._demand: Dict[int, int] = {}
         self.trail = [] if (self.audit or self.sanitize
                             or self.record_trail) else None
         self._sanitizer = None
@@ -718,6 +875,15 @@ class _ClusterBase:
             n_resizes=n_resizes, tick_s=self.tick_s,
             wall_s=time.perf_counter() - t0,
             events_by_jid=events_by_jid, timeline=timeline)
+
+    def _demand_sizes(self, t: _Tenant) -> List[int]:
+        """Published shortfalls of the *other* demand-publishing tenants
+        (sorted for determinism) — appended to a tenant's
+        ``pending_min_sizes`` view so Algorithm 2's line-6 shrink treats
+        a starved serving fleet exactly like a queued batch job."""
+        if not self._demand:
+            return []
+        return sorted(n for j, n in self._demand.items() if j != t.jid)
 
     def crosscheck(self, result: ClusterResult) -> Dict[int, List]:
         """cosim mode: verify every runner's resize trail against the
@@ -806,7 +972,7 @@ class ReferenceCluster(_ClusterBase):
             lo, hi = t.request()
             free = len(self._idle)
             if t.moldable and free >= lo:
-                self._start(t, min(free, hi), tick)
+                self._start(t, t.quantize(min(free, hi)), tick)
             elif not t.moldable and free >= hi:
                 self._start(t, hi, tick)
             elif not self.policy.backfill:
@@ -815,7 +981,8 @@ class ReferenceCluster(_ClusterBase):
     def _live_view(self, t: _Tenant) -> ClusterView:
         return live_view(
             available=len(self._idle),
-            pending_min_sizes=[p.request()[0] for p in self._pending],
+            pending_min_sizes=[p.request()[0] for p in self._pending]
+            + self._demand_sizes(t),
             tenants=self._running, exclude=t)
 
     def _query_gate(self, t: _Tenant, tick: int) -> bool:
@@ -946,14 +1113,20 @@ class Cluster(_ClusterBase):
             lo, hi = t.request()
             if lo > free:
                 break                          # strict FCFS: blocked head
-            self._start(t, min(free, hi) if t.moldable else hi, tick)
+            self._start(t, t.quantize(min(free, hi)) if t.moldable else hi,
+                        tick)
 
     # -- cluster view (O(1) aggregates) ---------------------------------
     def _live_view(self, t: _Tenant) -> ClusterView:
-        own = max(0, t.nprocs - t.params.preferred) if t.malleable else 0
+        own = max(0, t.nprocs - t.params.preferred) \
+            if t.malleable and not getattr(t, "reclaim_opaque", False) else 0
+        pend = self._pq.min_sizes(self._stateless)
+        demand = self._demand_sizes(t)
+        if demand:
+            pend = _WithDemand(pend, demand)
         return ClusterView(
             available=len(self._idle),
-            pending_min_sizes=self._pq.min_sizes(self._stateless),
+            pending_min_sizes=pend,
             reclaimable_others=self._reclaim_total - own)
 
     # -- inhibitor windows ----------------------------------------------
@@ -974,20 +1147,26 @@ class Cluster(_ClusterBase):
         return False
 
     # -- incremental counters -------------------------------------------
+    # reclaim_opaque tenants never enter _reclaim_total: a composite's
+    # actual size can drift from the decided target (partial absorbs /
+    # immediate-only shrinks), which would silently corrupt the
+    # incremental sum — and reclaimable_workers() excludes them on the
+    # reference path for the same reason, keeping the engines aligned.
     def _note_start(self, t: _Tenant, tick: int) -> None:
         if t.malleable:
-            self._reclaim_total += max(
-                0, t.runner.current - t.params.preferred)
+            if not getattr(t, "reclaim_opaque", False):
+                self._reclaim_total += max(
+                    0, t.runner.current - t.params.preferred)
             if not t.params.sched_period_s:
                 heapq.heappush(self._due_heap, (tick, t.jid))
 
     def _note_finish(self, t: _Tenant) -> None:
-        if t.malleable:
+        if t.malleable and not getattr(t, "reclaim_opaque", False):
             self._reclaim_total -= max(
                 0, t.final_procs - t.params.preferred)
 
     def _note_resize(self, t: _Tenant, old: int, new: int) -> None:
-        if t.malleable:
+        if t.malleable and not getattr(t, "reclaim_opaque", False):
             pref = t.params.preferred
             self._reclaim_total += max(0, new - pref) - max(0, old - pref)
 

@@ -187,7 +187,14 @@ class MalleableRunner:
                 self._step_fn(n)
         return time.perf_counter() - t0
 
-    # -- device pool management (the dmr.Cluster contract) -------------
+    # -- device pool management (the MalleableTenant contract) ---------
+    @property
+    def current_size(self) -> int:
+        """Workers actually running — the ``MalleableTenant`` spelling of
+        ``self.current`` (``repro.dmr.tenant``); ``len(devices) -
+        current_size`` is the excess a manager may reclaim."""
+        return self.current
+
     def grant_devices(self, new_devices: List) -> None:
         """Extend the live pool (Cluster expand path).  The grant may be
         non-contiguous — any devices the cluster has idle.  Appending

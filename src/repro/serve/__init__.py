@@ -3,7 +3,7 @@ stack: latency SLOs, not makespan.
 
 The batch subsystems (``repro.rms``, ``dmr.Cluster``) answer "how fast
 does the queue drain?"; serving answers "of the requests users sent,
-how many came back within the SLO, and at what cost?".  Four modules:
+how many came back within the SLO, and at what cost?".  Five modules:
 
 * :mod:`repro.serve.traffic` — request streams (diurnal / bursty /
   bimodal / ``trace:`` arrivals reinterpreted from the scenario
@@ -15,7 +15,11 @@ how many came back within the SLO, and at what cost?".  Four modules:
 * :mod:`repro.serve.replica` — :func:`make_decode_app` (the decode
   path as a ``dmr.App``; resize point = decode-step boundary) and
   :class:`ReplicaSet` (the elastic fleet engine, trail-audited like
-  ``dmr.Cluster``).
+  ``dmr.Cluster``; each replica is a ``MalleableTenant`` and scale-ups
+  prefer in-place mesh grows over replica cold starts).
+* :mod:`repro.serve.tenant` — :class:`ServeTenantSpec` /
+  :class:`ReplicaSetRunner`: a whole fleet submitted to ``dmr.Cluster``
+  as one composite tenant (mixed train+serve pools).
 * :mod:`repro.serve.metrics` — goodput under SLO, tail-latency CDFs,
   cost per million requests.
 
@@ -28,6 +32,7 @@ from repro.serve.replica import (Replica, ReplicaSet, ServeConfig,
                                  make_decode_app)
 from repro.serve.slo import (P2Estimator, QueueDepthPolicy, SLOAwarePolicy,
                              SLOTracker, WindowedPercentile)
+from repro.serve.tenant import ReplicaSetRunner, ServeTenantSpec
 from repro.serve.traffic import (LeastLoadedBalancer, Request, RequestQueue,
                                  make_request_stream)
 
@@ -38,4 +43,5 @@ __all__ = [
     "ServingMetrics", "PRICE_PER_DEVICE_HOUR", "CDF_GRID",
     "ServeConfig", "Replica", "ReplicaSet", "ServingResult",
     "make_decode_app", "decode_demo",
+    "ServeTenantSpec", "ReplicaSetRunner",
 ]

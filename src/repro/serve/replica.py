@@ -13,14 +13,22 @@ primitives rather than new machinery:
   a training job does between steps (see :func:`decode_demo`, driven by
   ``python -m repro.launch.serve``).
 
-* **Across replicas** — :class:`ReplicaSet` runs a fleet of fixed-size
-  replicas against a request stream, growing and shrinking the *count*
-  of replicas under a resize policy.  The fleet is one malleable job
-  from the policy's point of view (``MalleabilityParams`` in device
-  units, resizes in whole-replica quanta); the serving surface the
-  latency policies read (``slo``, ``queue_len``, ``head_wait_s``,
-  ``utilization``) is the ReplicaSet itself, passed as the ``job``
-  handle.
+* **Across replicas** — :class:`ReplicaSet` runs a fleet of replicas
+  against a request stream, growing and shrinking capacity under a
+  resize policy.  Every replica is a ``MalleableTenant``
+  (``repro.dmr.tenant``): devices move between the shared pool and a
+  replica only through ``grant_devices`` / ``release_devices`` /
+  ``shutdown`` — the same contract a training job's runner satisfies —
+  and when ``ServeConfig.max_devices_per_replica`` exceeds the quantum
+  the fleet *prefers resizing a live replica's mesh in place* (warm,
+  ``grow_ticks``) over cold-starting a new replica
+  (``cold_start_ticks``); shrinks likewise prefer in-place mesh shrinks
+  over drain-and-kill.  The fleet is one malleable job from the
+  policy's point of view (``MalleabilityParams`` in device units); the
+  serving surface the latency policies read (``slo``, ``queue_len``,
+  ``head_wait_s``, ``utilization``) is the ReplicaSet itself, passed as
+  the ``job`` handle.  Via ``repro.serve.tenant`` the whole fleet is in
+  turn submittable to ``dmr.Cluster`` as one composite tenant.
 
 :class:`ReplicaSet` is a discrete-event engine in the mold of
 ``dmr.Cluster``: one tick is one decode-step boundary
@@ -52,7 +60,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.params import MalleabilityParams
-from repro.core.policy import ClusterView, get_policy
+from repro.core.policy import Action, ClusterView, get_policy
 from repro.serve.metrics import ServingMetrics
 from repro.serve.slo import SLOTracker
 from repro.serve.traffic import LeastLoadedBalancer, Request, RequestQueue
@@ -215,7 +223,16 @@ def decode_demo(arch: str, *, batch: int = 4, prompt_len: int = 16,
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
-    """Fleet shape + service model + SLO knobs for :class:`ReplicaSet`."""
+    """Fleet shape + service model + SLO knobs for :class:`ReplicaSet`.
+
+    The per-replica mesh-elasticity knobs default to 0 = "same as
+    ``devices_per_replica``", which disables in-place resizing and keeps
+    the classic whole-replica fleet semantics; set
+    ``max_devices_per_replica`` above the quantum to let scale-ups grow
+    an existing replica's mesh through ``dmr.reconfig`` before paying a
+    replica cold start (``cold_start_ticks`` of no service for a new
+    replica vs ``grow_ticks`` of warm-up for in-place-granted devices).
+    """
     devices_per_replica: int = 2
     min_replicas: int = 1
     max_replicas: int = 8
@@ -228,39 +245,128 @@ class ServeConfig:
     slo_p99_s: float = 4.0
     estimator: str = "window"        # "window" | "p2"
     window: int = 512
-
-
-class _ReplicaTenant:
-    """Per-replica metadata shim so ``job_metadata`` / ``dump_trail``
-    treat a ReplicaSet like a cluster (a replica is a rigid job)."""
-    __slots__ = ("jid", "malleable", "moldable", "params")
-
-    def __init__(self, rid: int, n_devices: int):
-        self.jid = rid
-        self.malleable = False
-        self.moldable = False
-        self.params = MalleabilityParams(n_devices, n_devices, n_devices)
+    # -- per-replica mesh elasticity (0 = devices_per_replica) ----------
+    min_devices_per_replica: int = 0
+    max_devices_per_replica: int = 0
+    cold_start_ticks: int = 0        # new-replica boot: no service yet
+    grow_ticks: int = 0              # in-place-granted devices warming
 
 
 class Replica:
-    """One fixed-size serving replica: a device grant, ``slots``
-    concurrent sequences, and (in live mode) a ``MalleableRunner``
-    stepping the decode app each tick."""
+    """One serving replica — a :class:`~repro.dmr.tenant.MalleableTenant`
+    over its device grant.
+
+    ``slots = slots_per_device x current_size`` concurrent sequences;
+    devices enter and leave only through the tenant contract
+    (``grant_devices`` / ``release_devices`` / ``shutdown``), and the
+    fleet resizes the replica *in place* through ``apply_grow`` /
+    ``apply_shrink`` at a tick (= decode-step) boundary.  In live mode
+    those delegate to the replica's ``MalleableRunner`` —
+    ``apply_resize`` re-shards the decode state through the pattern
+    registry, so generated tokens are bit-identical across the resize
+    (``self.tokens`` captures the per-tick decode output for exactly
+    that assertion).  In the host service model the same contract moves
+    only bookkeeping.
+    """
+
+    moldable = False
 
     def __init__(self, rid: int, devices: Sequence, cfg: ServeConfig,
-                 runner=None):
+                 runner=None, warm_left: int = 0):
         self.rid = rid
-        self.devices = list(devices)
-        self.slots = cfg.slots_per_device * len(self.devices)
+        self.jid = rid                       # the tenant-contract identity
+        self.cfg = cfg
+        self._devices = list(devices)        # host mode; runner owns live
+        self._size = len(self._devices)
+        n = self._size
+        lo = min(cfg.min_devices_per_replica or n, n)
+        hi = max(cfg.max_devices_per_replica or n, n)
+        self.params = MalleabilityParams(lo, hi, n)
+        self.malleable = hi > lo
         self.active: List[Request] = []
         self.draining = False
         self.runner = runner
         self.state = runner.init() if runner is not None else None
+        #: per-tick decode output in live mode (the bit-identity tests
+        #: compare these element-wise across in-place grow and shrink)
+        self.tokens: Optional[List[np.ndarray]] = \
+            [] if runner is not None else None
+        self.warm_left = warm_left           # cold-start boot countdown
+        self._unwarmed = 0                   # granted, still warming up
+        self._grow_left = 0
         self._tick_i = 0
+
+    # -- the MalleableTenant contract -----------------------------------
+    @property
+    def devices(self) -> List:
+        return self.runner.devices if self.runner is not None \
+            else self._devices
+
+    @property
+    def current_size(self) -> int:
+        return self.runner.current if self.runner is not None \
+            else self._size
+
+    def grant_devices(self, new_devices: Sequence) -> None:
+        if self.runner is not None:
+            self.runner.grant_devices(list(new_devices))
+            return
+        ids = {d.id for d in self._devices}
+        dup = [d.id for d in new_devices if d.id in ids]
+        if dup:
+            raise ValueError(
+                f"devices {dup} already in replica {self.rid}'s pool")
+        self._devices.extend(new_devices)
+
+    def release_devices(self) -> List:
+        if self.runner is not None:
+            return self.runner.release_devices()
+        released = self._devices[self._size:]
+        self._devices = self._devices[:self._size]
+        return released
+
+    def shutdown(self) -> List:
+        if self.runner is not None:
+            return self.runner.shutdown()
+        released, self._devices = self._devices, []
+        return released
+
+    # -- in-place mesh resize (fleet calls these at tick boundaries) ----
+    def apply_grow(self, target: int) -> None:
+        """Grow onto already-granted devices; live mode re-shards the
+        decode state mid-generation (tokens stay bit-identical)."""
+        k = target - self.current_size
+        if self.runner is not None:
+            self.state = self.runner.apply_resize(
+                self.state, self._tick_i, Action("expand", target))
+        else:
+            self._size = target
+        if self.cfg.grow_ticks > 0:
+            self._unwarmed += k
+            self._grow_left = self.cfg.grow_ticks
+
+    def apply_shrink(self, target: int) -> None:
+        """Shrink the mesh in place; the released tail is returned by a
+        following ``release_devices`` call, never taken directly."""
+        if self.runner is not None:
+            self.state = self.runner.apply_resize(
+                self.state, self._tick_i, Action("shrink", target))
+        else:
+            self._size = target
+        self._unwarmed = 0
+        self._grow_left = 0
+
+    # -- the service model ----------------------------------------------
+    @property
+    def slots(self) -> int:
+        return self.cfg.slots_per_device * (self.current_size
+                                            - self._unwarmed)
 
     @property
     def free_slots(self) -> int:
-        return 0 if self.draining else self.slots - len(self.active)
+        if self.draining or self.warm_left > 0:
+            return 0
+        return self.slots - len(self.active)
 
     def admit(self, req: Request, now_s: float, cfg: ServeConfig) -> None:
         req.start_s = now_s
@@ -272,8 +378,17 @@ class Replica:
 
     def advance(self, now_s: float, cfg: ServeConfig) -> List[Request]:
         """One tick of service; returns requests that just finished."""
+        if self.warm_left > 0:               # still booting: no service
+            self.warm_left -= 1
+            return []
+        if self._grow_left > 0:
+            self._grow_left -= 1
+            if self._grow_left == 0:
+                self._unwarmed = 0
         if self.runner is not None:
-            self.state, _ = self.runner.step(self.state, self._tick_i)
+            self.state, out = self.runner.step(self.state, self._tick_i)
+            if self.tokens is not None and not isinstance(out, dict):
+                self.tokens.append(np.asarray(out))
         self._tick_i += 1
         done: List[Request] = []
         for req in self.active:
@@ -303,6 +418,11 @@ class ServingResult:
     n_scale_downs: int
     timeline: List[Tuple[int, int, int]]      # (tick, replicas, devices)
     trail: Optional[List[Tuple]]
+    #: scale decisions with readiness horizon — dicts with ``kind``
+    #: ("replica-add" | "grow-in-place" | "shrink-in-place"), ``tick``,
+    #: ``ready_tick`` and ``devices`` (the mixed-pool benchmark compares
+    #: time-to-capacity of the two scale-up paths from these)
+    scale_events: Optional[List[Dict]] = None
 
     @property
     def makespan_s(self) -> float:
@@ -340,6 +460,13 @@ class ReplicaSet:
     event stream (``.trail`` / ``dump_trail`` compatible),
     ``sanitize=True`` feeds a live :class:`TrailAuditor` that raises at
     the first accounting violation.
+
+    ``external_pool=True`` hands fleet sizing to an outer resource
+    manager (the ``repro.serve.tenant.ReplicaSetRunner`` adapter embeds
+    the fleet in a ``dmr.Cluster`` this way): the internal policy is
+    off, the pool is whatever the manager granted, and ``trail_sink``
+    forwards every trail event outward so the cluster's auditor sees
+    the fleet's internal grants as delegations of its own grant.
     """
 
     def __init__(self, requests: Sequence[Request], devices=16, *,
@@ -347,7 +474,8 @@ class ReplicaSet:
                  static_replicas: Optional[int] = None,
                  app_factory: Optional[Callable] = None,
                  record_trail: bool = True, sanitize: bool = False,
-                 max_ticks: int = 10_000_000):
+                 max_ticks: int = 10_000_000, external_pool: bool = False,
+                 trail_sink: Optional[Callable] = None):
         from repro.dmr.cluster import synthetic_pool
 
         self.requests = sorted(requests, key=lambda r: (r.arrival_s, r.rid))
@@ -358,14 +486,19 @@ class ReplicaSet:
         self._idle: List = list(pool)
         self._pool_ids = [d.id for d in pool]
         self.config = cfg = config or ServeConfig()
-        if cfg.devices_per_replica * cfg.max_replicas > len(pool) and \
+        self.external = external_pool
+        if not external_pool and \
+                cfg.devices_per_replica * cfg.max_replicas > len(pool) and \
                 static_replicas is None:
             raise ValueError(
                 f"pool of {len(pool)} devices cannot host max_replicas="
                 f"{cfg.max_replicas} x {cfg.devices_per_replica} devices")
         self.app_factory = app_factory
         self.static = static_replicas
-        if static_replicas is not None:
+        if external_pool:
+            self.policy = None
+            self.decisions = "external"
+        elif static_replicas is not None:
             if static_replicas * cfg.devices_per_replica > len(pool):
                 raise ValueError(
                     f"static_replicas={static_replicas} needs "
@@ -388,18 +521,21 @@ class ReplicaSet:
         self.queue = RequestQueue()
         self.balancer = LeastLoadedBalancer()
         self._replicas: List[Replica] = []
-        self._tenant_meta: Dict[int, _ReplicaTenant] = {}
+        self._all_replicas: Dict[int, Replica] = {}   # incl. retired
         self._next_rid = 0
         self._tick = 0
         self._now = 0.0
+        self._arr_i = 0
         self.max_ticks = max_ticks
         self.n_scale_ups = 0
         self.n_scale_downs = 0
         self.peak_devices = 0
         self.device_ticks = 0
         self.timeline: List[Tuple[int, int, int]] = []
+        self.scale_events: List[Dict] = []
         self.trail: Optional[List[Tuple]] = \
             [] if (record_trail or sanitize) else None
+        self._trail_sink = trail_sink
         self._auditor = None
         if sanitize:
             from repro.analysis.trail import TrailAuditor
@@ -437,8 +573,8 @@ class ReplicaSet:
 
     # -- dump_trail / job_metadata compatibility ------------------------
     @property
-    def tenants(self) -> List[_ReplicaTenant]:
-        return list(self._tenant_meta.values())
+    def tenants(self) -> List[Replica]:
+        return list(self._all_replicas.values())
 
     # -- internals ------------------------------------------------------
     def _trail_event(self, kind: str, jid: int, payload) -> None:
@@ -446,31 +582,38 @@ class ReplicaSet:
             self.trail.append((kind, jid, payload, self._tick))
         if self._auditor is not None:
             self._auditor.feed((kind, jid, payload, self._tick))
+        if self._trail_sink is not None:
+            self._trail_sink(kind, jid, payload)
 
     def _live(self) -> List[Replica]:
         return [r for r in self._replicas if not r.draining]
 
     def _replica_up(self) -> Optional[Replica]:
-        dpr = self.config.devices_per_replica
+        cfg = self.config
+        dpr = cfg.devices_per_replica
         if len(self._idle) < dpr:
             return None
         devs = [self._idle.pop() for _ in range(dpr)]
         rid = self._next_rid
         self._next_rid += 1
-        self._tenant_meta[rid] = _ReplicaTenant(rid, dpr)
-        if self._auditor is not None:
-            from repro.analysis.trail import JobMeta
-            self._auditor.jobs[rid] = JobMeta(
-                malleable=False, moldable=False,
-                min_procs=dpr, max_procs=dpr)
         runner = None
         if self.app_factory is not None:
             from repro import dmr
             n = len(devs)
+            lo = min(cfg.min_devices_per_replica or n, n)
+            hi = max(cfg.max_devices_per_replica or n, n)
             runner = dmr.MalleableRunner(
-                self.app_factory(), MalleabilityParams(n, n, n), rms={},
-                devices=devs)
-        rep = Replica(rid, devs, self.config, runner=runner)
+                self.app_factory(), MalleabilityParams(lo, hi, n), rms={},
+                devices=devs, allow_partial=True)
+        rep = Replica(rid, devs, cfg, runner=runner,
+                      warm_left=cfg.cold_start_ticks)
+        self._all_replicas[rid] = rep
+        if self._auditor is not None:
+            from repro.analysis.trail import JobMeta
+            self._auditor.jobs[rid] = JobMeta(
+                malleable=rep.malleable, moldable=False,
+                min_procs=rep.params.min_procs,
+                max_procs=rep.params.max_procs)
         self._replicas.append(rep)
         self._trail_event("replica-up", rid, tuple(d.id for d in devs))
         return rep
@@ -478,7 +621,7 @@ class ReplicaSet:
     def _replica_down(self, rep: Replica) -> None:
         self._trail_event("replica-down", rep.rid,
                           tuple(d.id for d in rep.devices))
-        self._idle.extend(rep.devices)
+        self._idle.extend(rep.shutdown())
         self._replicas.remove(rep)
 
     def _drop(self, req: Request) -> None:
@@ -488,86 +631,231 @@ class ReplicaSet:
             "request-drop", -1,
             (req.rid, round(req.wait_s(self._now), 6), req.deadline_s))
 
+    # -- scale paths (in-place mesh resize vs whole-replica churn) ------
+    def _add_replicas(self, n_new: int) -> int:
+        """Cold-start up to ``n_new`` replicas (the classic scale-up
+        path: ``cold_start_ticks`` of no service before the new replica
+        takes traffic).  Returns how many actually came up."""
+        cfg = self.config
+        added = 0
+        for _ in range(n_new):
+            if len(self._live()) >= cfg.max_replicas:
+                break
+            rep = self._replica_up()
+            if rep is None:
+                break
+            self.n_scale_ups += 1
+            self.scale_events.append(dict(
+                kind="replica-add", tick=self._tick,
+                ready_tick=self._tick + cfg.cold_start_ticks,
+                devices=len(rep.devices)))
+            added += 1
+        return added
+
+    def absorb_idle(self) -> int:
+        """Spawn replicas from the idle pool until it drops below one
+        quantum or the fleet is full — the composite adapter's start /
+        expand path (start absorbs are not counted as scale-ups).
+        Returns replicas started."""
+        n = 0
+        while len(self._live()) < self.config.max_replicas:
+            if self._replica_up() is None:
+                break
+            n += 1
+        return n
+
+    def _grow_in_place(self, rep: Replica, target: int) -> None:
+        """Grant idle devices to a live replica and grow its mesh in
+        place — grant first, then resize, mirroring the runner's
+        ordering so the auditor's held-set checks hold throughout."""
+        need = target - rep.current_size
+        devs = [self._idle.pop() for _ in range(need)]
+        rep.grant_devices(devs)
+        self._trail_event("grant", rep.rid, tuple(d.id for d in devs))
+        frm = rep.current_size
+        rep.apply_grow(target)
+        self._trail_event("replica-resize", rep.rid,
+                          (rep._tick_i, "expand", frm, target,
+                           len(rep.active), self.config.slots_per_device))
+        self.scale_events.append(dict(
+            kind="grow-in-place", tick=self._tick,
+            ready_tick=self._tick + self.config.grow_ticks,
+            devices=need))
+        self.n_scale_ups += 1
+
+    def _shrink_in_place(self, rep: Replica, target: int) -> None:
+        """Shrink a live replica's mesh and reclaim the shed tail —
+        resize first, then release: the released devices are exactly
+        the runner's ``devices[target:]`` excess."""
+        frm = rep.current_size
+        rep.apply_shrink(target)
+        self._trail_event("replica-resize", rep.rid,
+                          (rep._tick_i, "shrink", frm, target,
+                           len(rep.active), self.config.slots_per_device))
+        released = rep.release_devices()
+        self._idle.extend(released)
+        self._trail_event("release", rep.rid,
+                          tuple(d.id for d in released))
+        self.scale_events.append(dict(
+            kind="shrink-in-place", tick=self._tick,
+            ready_tick=self._tick, devices=len(released)))
+        self.n_scale_downs += 1
+
+    def _grow_live_replicas(self, need: int) -> int:
+        """In-place mesh grows before any cold start: most-loaded
+        replica first (it sheds queueing pressure soonest), stepping to
+        the next legal mesh size while idle devices and ``need`` allow.
+        Returns total devices added."""
+        added = 0
+        for rep in sorted(self._live(),
+                          key=lambda r: (-len(r.active), r.rid)):
+            while added < need:
+                cur = rep.current_size
+                cand = [s for s in rep.params.legal_sizes() if s > cur]
+                if not cand:
+                    break
+                step = min(cand) - cur
+                if step > need - added or step > len(self._idle):
+                    break
+                self._grow_in_place(rep, min(cand))
+                added += step
+        return added
+
+    def _shrink_live_replicas(self, excess: int) -> int:
+        """In-place mesh shrinks before any drain-and-kill: shed
+        devices from lightly loaded replicas wherever the active batch
+        still fits the smaller mesh.  Returns total devices shed."""
+        spd = self.config.slots_per_device
+        shed = 0
+        for rep in sorted(self._live(),
+                          key=lambda r: (len(r.active), -r.rid)):
+            if shed >= excess:
+                break
+            cur = rep.current_size
+            cand = [s for s in rep.params.legal_sizes()
+                    if s < cur and len(rep.active) <= s * spd
+                    and cur - s <= excess - shed]
+            if not cand:
+                continue
+            target = min(cand)
+            self._shrink_in_place(rep, target)
+            shed += cur - target
+        return shed
+
     def _consult(self) -> None:
         current = sum(len(r.devices) for r in self._live())
         view = ClusterView(available=len(self._idle),
                            pending_min_sizes=[], reclaimable_others=0)
         act = self.policy.decide(current, self.params, view, job=self)
-        dpr = self.config.devices_per_replica
+        cfg = self.config
+        dpr = cfg.devices_per_replica
         if act.kind == "expand" and act.target > current:
-            n_new = (min(act.target, self.params.max_procs) - current) // dpr
-            for _ in range(n_new):
-                if len(self._live()) >= self.config.max_replicas:
-                    break
-                if self._replica_up() is not None:
-                    self.n_scale_ups += 1
+            need = min(act.target, self.params.max_procs) - current
+            # the policy chooses the path: in-place mesh growth serves
+            # from already-warm replicas grow_ticks later, a cold start
+            # pays cold_start_ticks before taking any traffic
+            path = getattr(self.policy, "choose_scale_path",
+                           lambda job: "replica")(self)
+            if path == "in-place":
+                need -= self._grow_live_replicas(need)
+            self._add_replicas(need // dpr)
         elif act.kind == "shrink" and act.target < current:
-            n_drop = (current - max(act.target,
-                                    self.params.min_procs)) // dpr
-            # drain emptiest-first, newest on ties: oldest replicas keep
-            # the load (matches the balancer's low-rid tie-break)
+            excess = current - max(act.target, self.params.min_procs)
+            excess -= self._shrink_live_replicas(excess)
+            # drain whole replicas for the remainder: emptiest-first,
+            # newest on ties — oldest replicas keep the load (matches
+            # the balancer's low-rid tie-break)
             victims = sorted(self._live(),
                              key=lambda r: (len(r.active), -r.rid))
-            for rep in victims[:n_drop]:
-                if len(self._live()) <= self.config.min_replicas:
+            for rep in victims:
+                if excess < rep.current_size:
+                    continue
+                if len(self._live()) <= cfg.min_replicas:
                     break
                 rep.draining = True
+                excess -= rep.current_size
                 self.n_scale_downs += 1
 
-    # -- the engine -----------------------------------------------------
-    def run(self) -> ServingResult:
+    # -- the engine (run() composes these; the ReplicaSetRunner adapter
+    #    drives them one cluster-tick at a time) ------------------------
+    def start_fleet(self) -> None:
         cfg = self.config
+        if self.external:
+            if self.absorb_idle() == 0:
+                raise RuntimeError(
+                    "start grant below one replica quantum")
+            return
         n_start = self.static if self.static is not None \
             else max(cfg.min_replicas, min(cfg.initial_replicas,
                                            cfg.max_replicas))
         for _ in range(n_start):
             if self._replica_up() is None:
                 raise RuntimeError("pool too small for the starting fleet")
-        arr_i = 0
+
+    def tick_once(self) -> None:
+        """One full fleet tick: arrivals, expiry, admission, service,
+        teardown of drained replicas, then (internal policy only) a
+        scaling consult.  Does *not* advance ``self._tick``."""
+        cfg = self.config
+        self._now = now = self._tick * cfg.tick_s
         reqs = self.requests
+        while self._arr_i < len(reqs) and \
+                reqs[self._arr_i].arrival_s <= now:
+            self.queue.push(reqs[self._arr_i])
+            self._arr_i += 1
+        for req in self.queue.expire(now):
+            self._drop(req)
+        while len(self.queue):
+            rep = self.balancer.pick(self._replicas)
+            if rep is None:
+                break
+            rep.admit(self.queue.pop(), now, cfg)
+        held = sum(len(r.devices) for r in self._replicas)
+        self.device_ticks += held
+        self.peak_devices = max(self.peak_devices, held)
+        if self._tick % cfg.timeline_every == 0:
+            self.timeline.append((self._tick, len(self._replicas), held))
+        for rep in list(self._replicas):
+            for req in rep.advance(now, cfg):
+                self.slo.observe(req.latency_s())
+                self.metrics.complete(req)
+        for rep in [r for r in self._replicas
+                    if r.draining and not r.active]:
+            self._replica_down(rep)
+        if self._auditor is not None:
+            self._auditor.check_conservation(len(self._idle), self._tick)
+        if self.policy is not None and self._tick % cfg.resize_every == 0:
+            self._consult()
+
+    @property
+    def finished(self) -> bool:
+        return (self._arr_i >= len(self.requests) and not len(self.queue)
+                and not any(r.active for r in self._replicas))
+
+    def finish_fleet(self) -> None:
+        for rep in list(self._replicas):
+            self._replica_down(rep)
+        if self._auditor is not None:
+            self._auditor.check_conservation(len(self._idle), self._tick)
+
+    def build_result(self) -> ServingResult:
+        return ServingResult(
+            requests=list(self.requests), metrics=self.metrics,
+            ticks=self._tick + 1, tick_s=self.config.tick_s,
+            device_ticks=self.device_ticks, peak_devices=self.peak_devices,
+            n_scale_ups=self.n_scale_ups, n_scale_downs=self.n_scale_downs,
+            timeline=self.timeline, trail=self.trail,
+            scale_events=list(self.scale_events))
+
+    def run(self) -> ServingResult:
+        self.start_fleet()
         while True:
-            self._now = now = self._tick * cfg.tick_s
-            while arr_i < len(reqs) and reqs[arr_i].arrival_s <= now:
-                self.queue.push(reqs[arr_i])
-                arr_i += 1
-            for req in self.queue.expire(now):
-                self._drop(req)
-            while len(self.queue):
-                rep = self.balancer.pick(self._replicas)
-                if rep is None:
-                    break
-                rep.admit(self.queue.pop(), now, cfg)
-            held = sum(len(r.devices) for r in self._replicas)
-            self.device_ticks += held
-            self.peak_devices = max(self.peak_devices, held)
-            if self._tick % cfg.timeline_every == 0:
-                self.timeline.append((self._tick, len(self._replicas), held))
-            for rep in list(self._replicas):
-                for req in rep.advance(now, cfg):
-                    self.slo.observe(req.latency_s())
-                    self.metrics.complete(req)
-            for rep in [r for r in self._replicas
-                        if r.draining and not r.active]:
-                self._replica_down(rep)
-            if self._auditor is not None:
-                self._auditor.check_conservation(len(self._idle), self._tick)
-            if self.policy is not None and \
-                    self._tick % cfg.resize_every == 0:
-                self._consult()
-            if arr_i >= len(reqs) and not len(self.queue) and \
-                    not any(r.active for r in self._replicas):
+            self.tick_once()
+            if self.finished:
                 break
             self._tick += 1
             if self._tick > self.max_ticks:
                 raise RuntimeError(
                     f"serving run exceeded max_ticks={self.max_ticks}")
-        for rep in list(self._replicas):
-            self._replica_down(rep)
-        if self._auditor is not None:
-            self._auditor.check_conservation(len(self._idle), self._tick)
-        return ServingResult(
-            requests=list(self.requests), metrics=self.metrics,
-            ticks=self._tick + 1, tick_s=cfg.tick_s,
-            device_ticks=self.device_ticks, peak_devices=self.peak_devices,
-            n_scale_ups=self.n_scale_ups, n_scale_downs=self.n_scale_downs,
-            timeline=self.timeline, trail=self.trail)
+        self.finish_fleet()
+        return self.build_result()

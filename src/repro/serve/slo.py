@@ -256,7 +256,12 @@ class SLOAwarePolicy(BasePolicy):
         if pressure:
             self._calm = 0
             target = min(params.max_procs, current + quantum)
-            if target > current and cluster.available >= target - current:
+            if target > current:
+                # no pool-availability guard here: the caller owns pool
+                # arbitration (a standalone fleet simply fails to start
+                # a replica; an embedded fleet's blocked expand must
+                # surface so the cluster can publish its demand and
+                # shrink co-tenants toward it)
                 return Action("expand", target)
             return Action.none(current)
 
@@ -272,6 +277,23 @@ class SLOAwarePolicy(BasePolicy):
         else:
             self._calm = 0
         return Action.none(current)
+
+    def choose_scale_path(self, job) -> str:
+        """Latency pressure means capacity is needed *now*: prefer
+        growing a live replica's warm mesh in place (``grow_ticks`` to
+        readiness) over a replica cold start (``cold_start_ticks``).
+        A cold-queue grow (no latency evidence yet) builds out the
+        baseline fleet with whole replicas instead."""
+        tracker = getattr(job, "slo", None)
+        if tracker is None:
+            return "replica"
+        warm = tracker.n >= self.min_samples
+        slo = tracker.slo_p99_s
+        p99 = tracker.quantile(0.99) if warm else math.nan
+        if (warm and p99 > slo) or \
+                getattr(job, "head_wait_s", 0.0) >= self.wait_fraction * slo:
+            return "in-place"
+        return "replica"
 
 
 class QueueDepthPolicy(BasePolicy):
@@ -304,7 +326,8 @@ class QueueDepthPolicy(BasePolicy):
         slots_per_replica = getattr(job, "slots_per_replica", 1)
         if queue_len > self.grow_depth * n_replicas:
             target = min(params.max_procs, current + quantum)
-            if target > current and cluster.available >= target - current:
+            if target > current:
+                # pool arbitration is the caller's job (see SLOAware)
                 return Action("expand", target)
             return Action.none(current)
         outstanding = queue_len + getattr(job, "in_flight", 0)
@@ -315,6 +338,13 @@ class QueueDepthPolicy(BasePolicy):
                 if target < current:
                     return Action("shrink", target)
         return Action.none(current)
+
+    def choose_scale_path(self, job) -> str:
+        """Backlog deeper than one replica's slot count means waiting
+        out a cold start loses goodput: grow a warm mesh in place."""
+        spr = max(1, int(getattr(job, "slots_per_replica", 1)))
+        return "in-place" if getattr(job, "queue_len", 0) > spr \
+            else "replica"
 
 
 POLICIES.setdefault(SLOAwarePolicy.name, SLOAwarePolicy)

@@ -260,6 +260,70 @@ def test_dmr105_quiet_outside_window_and_when_ambiguous():
 
 
 # ----------------------------------------------------------------------
+# DMR106 — device-list mutation outside the tenant contract
+# ----------------------------------------------------------------------
+
+BUGGY_DIRECT_APPEND = """
+    class Scheduler:
+        def rebalance(self, tenant, spare):
+            tenant.devices.extend(spare)      # bypasses grant_devices
+"""
+
+BUGGY_REBIND = """
+    def shrink(runner, k):
+        runner.devices = runner.devices[:k]
+"""
+
+BUGGY_SLICE_AND_DEL = """
+    def hack(tenant, i):
+        tenant.devices[0] = None
+        del tenant.devices[i]
+"""
+
+FIXED_CONTRACT_METHODS = """
+    class Tenant:
+        def __init__(self, devices):
+            self.devices = list(devices)
+        def grant_devices(self, devs):
+            self.devices.extend(devs)
+        def release_devices(self):
+            tail, self.devices = self.devices[4:], self.devices[:4]
+            return tail
+        def shutdown(self):
+            out, self.devices = self.devices, []
+            return out
+        def handle_failure(self, dev):
+            self.devices.remove(dev)
+"""
+
+FIXED_READ_ONLY = """
+    def report(tenant):
+        n = len(tenant.devices)
+        first = tenant.devices[0]
+        return n, list(tenant.devices)
+"""
+
+
+def test_dmr106_fires_on_out_of_contract_mutation():
+    assert "DMR106" in _codes(BUGGY_DIRECT_APPEND)
+    assert "DMR106" in _codes(BUGGY_REBIND)
+    assert _codes(BUGGY_SLICE_AND_DEL).count("DMR106") == 2
+
+
+def test_dmr106_quiet_inside_contract_and_on_reads():
+    assert "DMR106" not in _codes(FIXED_CONTRACT_METHODS)
+    assert "DMR106" not in _codes(FIXED_READ_ONLY)
+
+
+def test_dmr106_suppressible_inline():
+    src = """
+    def migrate(tenant, devs):
+        tenant.devices.extend(devs)  # dmr: ignore[DMR106]
+    """
+    assert _codes(src) == []
+
+
+# ----------------------------------------------------------------------
 # suppressions, syntax errors, driver
 # ----------------------------------------------------------------------
 

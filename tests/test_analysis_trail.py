@@ -515,6 +515,145 @@ def test_detects_drop_by_unknown_replica():
     assert "replica-not-up" in kinds
 
 
+# ----------------------------------------------------------------------
+# in-place mesh-resize events and composite-tenant delegation
+# ----------------------------------------------------------------------
+
+def _served_elastic():
+    """A valid serving trail containing in-place replica-resize events
+    (one grow, one shrink), driven at fixed ticks for determinism."""
+    from repro.serve import ReplicaSet, ServeConfig, make_request_stream
+    cfg = ServeConfig(devices_per_replica=2, max_devices_per_replica=4,
+                      min_replicas=1, max_replicas=2, initial_replicas=1,
+                      slots_per_device=4)
+    reqs = make_request_stream("steady", 40, horizon_s=10.0, seed=2)
+    rs = ReplicaSet(reqs, devices=8, config=cfg, static_replicas=1)
+    rs.start_fleet()
+    rep = rs._replicas[0]
+    for i in range(60):
+        if i == 4:
+            rs._grow_in_place(rep, 4)
+        if i == 10:
+            rs._shrink_in_place(rep, 2)
+        rs.tick_once()
+        if rs.finished:
+            break
+        rs._tick += 1
+    rs.finish_fleet()
+    resizes = [e for e in rs.trail if e[0] == "replica-resize"]
+    assert [e[2][1] for e in resizes] == ["expand", "shrink"], \
+        "fixture regression: expected one grow + one shrink"
+    return rs
+
+
+def test_elastic_serving_trail_audits_clean():
+    rs = _served_elastic()
+    assert _mutate_serving(rs, lambda t: t) == []
+
+
+def test_detects_replica_resize_not_up():
+    rs = _served_elastic()
+
+    def ghost_resize(trail):
+        i = _first(trail, "replica-resize")
+        tick = trail[i][3]
+        return trail[:i] + \
+            [("replica-resize", 999, (0, "expand", 2, 4, 0, 4), tick)] + \
+            trail[i:]
+    kinds = _kinds(_mutate_serving(rs, ghost_resize))
+    assert "replica-resize-not-up" in kinds
+
+
+def test_detects_grow_exceeds_grant():
+    rs = _served_elastic()
+
+    # the grow claims a target beyond the devices the replica holds
+    def overgrow(trail):
+        i = _first(trail, "replica-resize")
+        k, rid, (step, kind, frm, to, act, spd), tick = trail[i]
+        bad = (k, rid, (step, kind, frm, to + 1, act, spd), tick)
+        return trail[:i] + [bad] + trail[i + 1:]
+    kinds = _kinds(_mutate_serving(rs, overgrow))
+    assert "grow-exceeds-grant" in kinds
+
+
+def test_detects_shrink_below_active():
+    rs = _served_elastic()
+
+    # the shrink leaves fewer slots than in-flight sequences
+    def overshrink(trail):
+        idx = [i for i, e in enumerate(trail)
+               if e[0] == "replica-resize" and e[2][1] == "shrink"]
+        i = idx[0]
+        k, rid, (step, kind, frm, to, act, spd), tick = trail[i]
+        bad = (k, rid, (step, kind, frm, to, to * spd + 1, spd), tick)
+        return trail[:i] + [bad] + trail[i + 1:]
+    kinds = _kinds(_mutate_serving(rs, overshrink))
+    assert "shrink-below-active" in kinds
+
+
+def _composite_cluster():
+    """A sched_only cluster hosting a serving fleet as one composite
+    tenant: its trail carries namespaced delegation events."""
+    from repro.serve import ServeConfig
+    from repro.serve.tenant import ServeTenantSpec
+    specs = materialize_live("steady", 4, device_count=8, max_steps=12,
+                             seed=1)
+    fleet = ServeTenantSpec(
+        jid=500,
+        config=ServeConfig(devices_per_replica=2, min_replicas=1,
+                           max_replicas=3, initial_replicas=2,
+                           max_devices_per_replica=4),
+        n_requests=200, horizon_s=20.0, seed=3)
+    cl = _cluster(list(specs) + [fleet], record_trail=True)
+    cl.run()
+    from repro.analysis.trail import SUB_JID_BASE
+    assert any(e[1] >= SUB_JID_BASE and e[0] == "replica-up"
+               for e in cl.trail), \
+        "fixture regression: no delegated replica lifecycles in the trail"
+    return cl
+
+
+def test_composite_cluster_trail_audits_clean():
+    cl = _composite_cluster()
+    assert audit_trail(cl.trail, cl._pool_ids,
+                       jobs=job_metadata(cl)) == []
+
+
+def test_detects_delegation_outside_grant():
+    from repro.analysis.trail import SUB_JID_BASE, parent_of
+    cl = _composite_cluster()
+    trail = [tuple(e) for e in cl.trail]
+    di = next(i for i, e in enumerate(trail)
+              if e[0] == "replica-up" and e[1] >= SUB_JID_BASE)
+    kind, jid, ids, tick = trail[di]
+    parent = parent_of(jid)
+    # every device the parent was ever granted
+    parents_devs = {d for e in trail
+                    if e[0] == "grant" and e[1] == parent for d in e[2]}
+    outside = next(d for d in cl._pool_ids if d not in parents_devs)
+    bad = trail[:di] + [(kind, jid, ids + (outside,), tick)] + \
+        trail[di + 1:]
+    kinds = _kinds(audit_trail(bad, cl._pool_ids, jobs=job_metadata(cl)))
+    assert "delegation-outside-grant" in kinds
+
+
+def test_detects_release_while_sub_delegated():
+    """A top-level release of a device still delegated to a child
+    replica is flagged: the fleet must tear the replica down first."""
+    from repro.analysis.trail import SUB_JID_BASE, parent_of
+    cl = _composite_cluster()
+    trail = [tuple(e) for e in cl.trail]
+    di = next(i for i, e in enumerate(trail)
+              if e[0] == "replica-up" and e[1] >= SUB_JID_BASE)
+    kind, jid, ids, tick = trail[di]
+    parent = parent_of(jid)
+    bad = trail[:di + 1] + [("release", parent, (ids[0],), tick)] + \
+        trail[di + 1:]
+    kinds = _kinds(audit_trail(bad, cl._pool_ids, jobs=job_metadata(cl)))
+    assert "bad-release" in kinds
+
+
 def test_trace_scale_replay_trail_audits_clean():
     """The offline detector at SWF trace scale: a synthetic-trace
     sched_only replay's full trail audits clean, in O(events)."""

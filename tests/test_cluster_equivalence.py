@@ -123,6 +123,47 @@ def test_non_malleable_workload_agrees():
     assert_equivalent(specs, n_devices=8, policy="algorithm2")
 
 
+def test_engines_agree_hosting_a_serving_fleet():
+    """A mixed train+serve pool: batch jobs co-scheduled with a whole
+    ReplicaSet submitted as one composite tenant.  Both engines must
+    agree on everything — including the namespaced delegation events the
+    fleet forwards into the cluster trail — and the trail must audit
+    clean with the composite tenant's result captured."""
+    from repro.analysis.trail import SUB_JID_BASE, audit_trail, job_metadata
+    from repro.serve import ServeConfig
+    from repro.serve.tenant import ServeTenantSpec
+
+    def specs():
+        jobs = materialize_live("steady", 6, device_count=8, max_steps=16,
+                                seed=1)
+        fleet = ServeTenantSpec(
+            jid=1000,
+            config=ServeConfig(devices_per_replica=2, min_replicas=1,
+                               max_replicas=4, initial_replicas=2,
+                               max_devices_per_replica=4,
+                               cold_start_ticks=4, grow_ticks=1),
+            n_requests=300, horizon_s=30.0, seed=3)
+        return list(jobs) + [fleet]
+
+    cle, re_ = _run(Cluster, specs(), record_trail=True)
+    clr, rr = _run(ReferenceCluster, specs(), record_trail=True)
+    se, sr = re_.summary(), rr.summary()
+    se.pop("wall_s"), sr.pop("wall_s")
+    assert se == sr
+    assert cle.trail == clr.trail
+    assert any(e[1] >= SUB_JID_BASE for e in cle.trail)  # fleet delegated
+    assert audit_trail(cle.trail, cle._pool_ids,
+                       jobs=job_metadata(cle)) == []
+    for cl in (cle, clr):
+        ten = next(t for t in cl.tenants if getattr(t, "composite", False))
+        assert ten.result is not None
+        assert ten.result.metrics.n_completed > 0
+    # the two engines served the identical request outcome
+    a = next(t for t in cle.tenants if getattr(t, "composite", False))
+    b = next(t for t in clr.tenants if getattr(t, "composite", False))
+    assert a.result.summary() == b.result.summary()
+
+
 # ----------------------------------------------------------------------
 # pool-accounting invariant (promoted from test_cluster's per-tick audit)
 # ----------------------------------------------------------------------

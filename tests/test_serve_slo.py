@@ -165,13 +165,15 @@ def test_slo_aware_cold_start_grows_on_queue():
     assert act.kind == "expand"
 
 
-def test_slo_aware_respects_pool_and_bounds():
+def test_slo_aware_respects_bounds_and_surfaces_blocked_expand():
     pol = SLOAwarePolicy()
     job = _Surface(_warm_tracker(6.0))
-    # no idle devices: cannot expand
+    # no idle devices: the expand is still *returned* — pool arbitration
+    # belongs to the caller (an embedded fleet's blocked expand is what
+    # the cluster publishes as demand so co-tenants shrink toward it)
     act = pol.decide(4, _params(), ClusterView(available=0,
                                                pending_min_sizes=[]), job)
-    assert act.kind == "none"
+    assert act.kind == "expand" and act.target == 6
     # at max_procs: cannot expand
     act = pol.decide(16, _params(), ClusterView(available=8,
                                                 pending_min_sizes=[]), job)

@@ -243,3 +243,56 @@ print("SERVE_LIVE_OK")
 def test_live_replica_resize_and_fleet():
     out = run_devices(LIVE_SCRIPT, n_devices=8)
     assert "SERVE_LIVE_OK" in out
+
+
+# 3) in-place mesh grow AND shrink on a live replica, through the fleet's
+#    scale path (grant -> apply_grow -> trail; apply_shrink -> release):
+#    the decode stream must be bit-identical to a never-resized run
+LIVE_INPLACE_SCRIPT = r"""
+import warnings; warnings.filterwarnings("ignore")
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.serve import (ReplicaSet, ServeConfig, make_decode_app,
+                         make_request_stream)
+
+cfg = get_config("mamba2-370m-smoke")
+factory = lambda: make_decode_app(cfg, batch=2, cache_len=32)
+sc = ServeConfig(devices_per_replica=2, max_devices_per_replica=4,
+                 min_replicas=1, max_replicas=1, initial_replicas=1,
+                 slots_per_device=4)
+
+def drive(resize):
+    reqs = make_request_stream("steady", 8, horizon_s=1.0, mean_decode=6,
+                               max_decode_factor=1.0, seed=1)
+    rs = ReplicaSet(reqs, devices=jax.devices()[:4], config=sc,
+                    static_replicas=1, app_factory=factory, sanitize=True)
+    rs.start_fleet()
+    rep = rs._replicas[0]
+    for i in range(10):
+        if resize and i == 3:
+            rs._grow_in_place(rep, 4)
+            assert rep.current_size == 4 and len(rs._idle) == 0
+        if resize and i == 6:
+            rs._shrink_in_place(rep, 2)
+            assert rep.current_size == 2 and len(rs._idle) == 2
+        rs.tick_once()
+        rs._tick += 1
+    return rep, rs
+
+rep_s, _ = drive(False)
+rep_e, rs_e = drive(True)
+a, b = np.stack(rep_s.tokens), np.stack(rep_e.tokens)
+assert a.shape == b.shape and np.array_equal(a, b), (a, b)
+kinds = [e["kind"] for e in rs_e.scale_events]
+assert kinds == ["grow-in-place", "shrink-in-place"]
+assert rs_e.n_scale_ups == 1 and rs_e.n_scale_downs == 1
+assert [e.action for e in rep_e.runner.events] == ["expand", "shrink"]
+assert all(e.transfer.bytes_moved > 0 for e in rep_e.runner.events)
+print("SERVE_INPLACE_OK")
+"""
+
+
+def test_live_in_place_grow_shrink_tokens_bit_identical():
+    out = run_devices(LIVE_INPLACE_SCRIPT, n_devices=8)
+    assert "SERVE_INPLACE_OK" in out

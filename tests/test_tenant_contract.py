@@ -1,0 +1,131 @@
+"""The MalleableTenant contract, shared across every implementation.
+
+One parametrized suite drives the four device-pool holders —
+``MalleableRunner`` (a single mesh job), ``_Tenant`` (a cluster job
+wrapping that runner), ``Replica`` (one serving replica, host mode) and
+``ReplicaSetRunner`` (a whole fleet as a composite tenant) — through the
+same grant/release/shutdown sequence.  The cluster's pool accounting
+and the trail auditor both assume these semantics hold identically no
+matter which layer a device is parked in.
+"""
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core.params import MalleabilityParams
+from repro.dmr import MalleableTenant, SchedOnlyApp, synthetic_pool
+from repro.dmr.cluster import _null_redistribute, _sched_only_mesh, _Tenant
+from repro.dmr.runner import MalleableRunner
+from repro.rms.workload import materialize_live
+from repro.serve import ReplicaSetRunner, ServeConfig
+from repro.serve.replica import Replica, ReplicaSet
+from repro.serve.tenant import ServeTenantSpec
+from repro.serve.traffic import make_request_stream
+
+POOL = synthetic_pool(8)
+
+
+def _runner(devs):
+    return MalleableRunner(SchedOnlyApp(), MalleabilityParams(2, 8, 2),
+                           devices=list(devs), initial_procs=2,
+                           allow_partial=True,
+                           mesh_factory=_sched_only_mesh,
+                           redistribute=_null_redistribute)
+
+
+def make_runner():
+    return _runner(POOL[:2])
+
+
+def make_cluster_tenant():
+    spec = materialize_live("steady", 1, device_count=8, max_steps=4,
+                            seed=0)[0]
+    t = _Tenant(spec, SchedOnlyApp())
+    t.runner = _runner(POOL[:2])
+    return t
+
+
+def make_replica():
+    cfg = ServeConfig(devices_per_replica=2, max_devices_per_replica=4)
+    return Replica(0, list(POOL[:2]), cfg)
+
+
+def make_fleet_runner():
+    cfg = ServeConfig(devices_per_replica=2, min_replicas=1,
+                      max_replicas=1, initial_replicas=1)
+    reqs = make_request_stream("diurnal", 8, horizon_s=4.0, seed=0)
+    fleet = ReplicaSet(reqs, devices=list(POOL[:2]), config=cfg,
+                       external_pool=True)
+    tenant = SimpleNamespace(jid=7, rms=None, result=None)
+    spec = ServeTenantSpec(jid=7, config=cfg)
+    runner = ReplicaSetRunner(tenant, fleet, spec.device_params())
+    runner.init()                      # absorb the grant into one replica
+    return runner
+
+
+FACTORIES = [
+    ("MalleableRunner", make_runner),
+    ("_Tenant", make_cluster_tenant),
+    ("Replica", make_replica),
+    ("ReplicaSetRunner", make_fleet_runner),
+]
+
+
+@pytest.mark.parametrize("name,make", FACTORIES,
+                         ids=[f[0] for f in FACTORIES])
+def test_satisfies_protocol(name, make):
+    t = make()
+    assert isinstance(t, MalleableTenant)
+
+
+@pytest.mark.parametrize("name,make", FACTORIES,
+                         ids=[f[0] for f in FACTORIES])
+def test_grant_release_shutdown_sequence(name, make):
+    t = make()
+    assert t.current_size == 2
+
+    # grant is append-only: new devices join the pool, the prefix the
+    # tenant is running on is untouched, and current_size is unchanged
+    # until the tenant itself resizes onto them
+    spares = POOL[2:4]
+    t.grant_devices(list(spares))
+    assert t.current_size == 2
+
+    # granting a device the tenant already holds is a contract error
+    with pytest.raises(ValueError):
+        t.grant_devices([spares[0]])
+
+    # release returns exactly the excess beyond current_size
+    released = t.release_devices()
+    assert sorted(d.id for d in released) == [d.id for d in spares]
+    assert t.release_devices() == []            # idempotent once trimmed
+
+    # shutdown returns every remaining device
+    final = t.shutdown()
+    assert sorted(d.id for d in final) == [d.id for d in POOL[:2]]
+
+
+def test_replica_host_mode_grow_and_shrink():
+    """In-place resize moves devices between 'held' and 'running' without
+    any leaving the replica; release only sees devices after a shrink."""
+    rep = make_replica()
+    rep.grant_devices(list(POOL[2:4]))
+    rep.apply_grow(4)
+    assert rep.current_size == 4
+    assert rep.release_devices() == []          # all 4 are in use
+    rep.apply_shrink(2)
+    assert rep.current_size == 2
+    released = rep.release_devices()
+    assert sorted(d.id for d in released) == [2, 3]
+    assert [d.id for d in rep.devices] == [0, 1]
+
+
+def test_fleet_runner_excess_parks_in_idle():
+    """A composite tenant's reclaimable excess IS the fleet's idle list:
+    the cluster sweep and the fleet agree on which devices are spare."""
+    r = make_fleet_runner()
+    r.grant_devices(list(POOL[2:4]))
+    assert len(r.fleet._idle) == 2
+    assert r.current_size == 2                  # max_replicas=1: no absorb
+    assert sorted(d.id for d in r.release_devices()) == [2, 3]
+    assert r.fleet._idle == []
